@@ -1,0 +1,33 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+DRYRUN = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def run():
+    t0 = time.perf_counter()
+    if not os.path.exists(DRYRUN):
+        emit("roofline", 0.0, f"missing {DRYRUN}; run repro.launch.dryrun")
+        return
+    recs = [r for r in json.load(open(DRYRUN))
+            if r.get("status") == "ok" and r["mesh"] == "16x16"]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in recs:
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             r["bound_s"] * 1e6,
+             f"dom={r['dominant']} comp={r['t_compute_s']:.2e}s "
+             f"mem={r['t_memory_s']:.2e}s coll={r['t_collective_s']:.2e}s "
+             f"frac={r['roofline_fraction']:.3f} "
+             f"useful={r['useful_flops_ratio']:.3f}")
+    emit("roofline_total", (time.perf_counter() - t0) * 1e6,
+         f"{len(recs)} single-pod cells")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Accuracy pipeline (paper Tbl. 3 stand-in, no LLaMA weights offline):
+train a tiny LM, then evaluate perplexity under FP32, W8A8 and W4A8
+TransitiveLinear serving — the paper's lossless-vs-quantizer separation:
+transitive execution adds ZERO error on top of the quantizer.
+
+Run: PYTHONPATH=src python examples/quantize_eval.py
+"""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import Model
+from repro.quant import QuantConfig, quantize_groupwise
+from repro.train.loop import train
+
+cfg = get_reduced("smollm_135m").replace(n_layers=2, dtype=jnp.float32)
+state, hist = train(cfg, seq_len=64, global_batch=16, steps=60, lr=5e-3)
+params = state["params"]
+print(f"trained: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+data = SyntheticLM(cfg, 64, 16, seed=123)
+batch = {k: v[0] for k, v in data.batch(999).items()}
+
+
+def ppl(model, p):
+    return math.exp(float(model.loss(p, batch)))
+
+
+def quantize_params(params, w_bits, group=64):
+    """PTQ: fp linear weights -> (qw, sg) leaves for mode='ptq' serving."""
+    def q(tree):
+        if isinstance(tree, dict) and "w" in tree and tree["w"].ndim >= 2:
+            w = tree["w"]
+            flat = w.reshape(-1, w.shape[-1])
+            qw, sg = quantize_groupwise(flat, w_bits, min(group,
+                                                          w.shape[-1]))
+            return {"qw": qw.reshape(w.shape),
+                    "sg": sg.reshape(w.shape[:-1] + (-1,))}
+        if isinstance(tree, dict):
+            return {k: q(v) for k, v in tree.items()}
+        return tree
+    return q(params)
+
+
+m_fp = Model(cfg)
+print(f"PPL fp32 : {ppl(m_fp, params):8.3f}")
+for bits in (8, 4):
+    qcfg = cfg.replace(quant=QuantConfig(mode="ptq", w_bits=bits, a_bits=8,
+                                         group=64))
+    qp = quantize_params(params, bits)
+    qp = {**params, **{k: qp[k] for k in ("blocks",)}}
+    m_q = Model(qcfg)
+    p_int = ppl(m_q, qp)
+    p_lut = math.exp(float(Model(qcfg.replace(
+        quant=qcfg.quant.with_(path="lut"))).loss(qp, batch)))
+    print(f"PPL W{bits}A8 : {p_int:8.3f}   (transitive LUT path: {p_lut:8.3f}"
+          f" — identical => lossless)")

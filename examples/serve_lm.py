@@ -1,0 +1,41 @@
+"""Serving example: quantize a model with the paper's technique (W4A8
+TransitiveLinear + dynamic int8 attention), prefill a batch of prompts and
+decode with greedy sampling — the Transitive-Array inference path.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.launch.specs import serve_config
+from repro.models.model import Model
+from repro.train.serve_step import greedy_generate
+
+# FP model + its W4A8 serving twin
+cfg_fp = get_reduced("chatglm3_6b").replace(dtype=jnp.float32)
+cfg_q = serve_config(cfg_fp)                      # ptq W4A8 + int8 attention
+
+m_fp, m_q = Model(cfg_fp), Model(cfg_q)
+params_fp = m_fp.init(jax.random.PRNGKey(0))
+params_q = m_q.init(jax.random.PRNGKey(0))        # quantized at init
+
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16),
+                                      0, cfg_fp.vocab, jnp.int32)}
+out_fp = greedy_generate(m_fp, params_fp, batch, max_len=64, n_steps=8)
+out_q = greedy_generate(m_q, params_q, batch, max_len=64, n_steps=8)
+print("fp  tokens:", np.asarray(out_fp))
+print("q   tokens:", np.asarray(out_q))
+print("note: weights differ (fp vs freshly-quantized init); the point is "
+      "the full W4A8 transitive serving path runs end-to-end.")
+
+# lossless check at the layer level: int paths agree bit-exactly
+from repro.quant import QuantConfig, linear_init, linear_apply
+cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=128)
+p = linear_init(jax.random.PRNGKey(2), 256, 128, cfg)
+x = jax.random.normal(jax.random.PRNGKey(3), (8, 256))
+y_dot = linear_apply(p, x, cfg.with_(path="int_dot"))
+y_lut = linear_apply(p, x, cfg.with_(path="lut"))
+np.testing.assert_allclose(np.asarray(y_dot), np.asarray(y_lut), rtol=1e-5)
+print("TransitiveLinear int-dot == LUT path ✓ (lossless, Sec. 2.1)")

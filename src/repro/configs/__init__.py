@@ -1,0 +1,44 @@
+"""Architecture config registry: one module per assigned arch (+ paper's).
+
+``get_config(name)`` returns the full-size ModelConfig;
+``get_reduced(name)`` the smoke-test-sized variant of the same family.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, reduced  # noqa: F401
+
+ARCHS = [
+    "moonshot_v1_16b_a3b",
+    "llama4_maverick_400b_a17b",
+    "llama_3_2_vision_90b",
+    "recurrentgemma_9b",
+    "smollm_135m",
+    "mistral_nemo_12b",
+    "qwen3_14b",
+    "chatglm3_6b",
+    "xlstm_125m",
+    "whisper_tiny",
+    "llama1_7b",          # the paper's own evaluation model
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canonical(name: str) -> str:
+    key = name.replace("-", "_").replace(".", "_")
+    if key in ARCHS:
+        return key
+    if name in _ALIAS:
+        return _ALIAS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.config()
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return reduced(get_config(name))

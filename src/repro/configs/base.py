@@ -1,0 +1,128 @@
+"""Model / run configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.quant.qlinear import QuantConfig
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "reduced"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | vlm | hybrid | ssm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 → d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_capacity_factor: float = 1.25
+
+    # --- block pattern (super-block scanned n_layers/len(pattern) times) ---
+    block_pattern: tuple[str, ...] = ("attn",)   # attn|cross|rglru|mlstm|slstm
+    block_tail: tuple[str, ...] = ()  # remainder layers applied after scan
+    mlp_after: tuple[int, ...] | None = None   # pattern idxs with MLP (None=all)
+    local_window: int = 0            # 0 → global attention
+
+    # --- modality frontends (stubs per spec) ---
+    n_context_tokens: int = 0        # vision patches / audio frames fed as
+                                     # precomputed embeddings via input_specs
+    encoder_layers: int = 0          # whisper encoder depth (enc-dec)
+    max_target_positions: int = 0    # whisper decoder cap (448)
+
+    # --- flags ---
+    qk_norm: bool = False
+    rope_2d: bool = False            # chatglm-style partial rotary
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    # --- quantization (the paper's technique; serve path) ---
+    quant: QuantConfig = QuantConfig()
+    quant_attention: bool = False    # dynamic int8 attention GEMMs (Sec. 5.7)
+    kv_cache_bits: int = 16          # 8 → int8 KV cache + stored scales
+
+    # --- training substrate knobs ---
+    dtype: Any = jnp.bfloat16
+    remat: str = "block"             # none | block
+    grad_accum: int = 1
+    seq_shard: bool = False          # Megatron-SP activations between blocks
+    opt_state_dtype: Any = jnp.float32
+    factored_second_moment: bool = False   # Adafactor-style v (huge models)
+    compress_pod_grads: bool = False       # int8+error-feedback DCN psum
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_repeats(self) -> int:
+        body = self.n_layers - len(self.block_tail)
+        assert body % len(self.block_pattern) == 0, \
+            (self.name, self.n_layers, self.block_pattern, self.block_tail)
+        return body // len(self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can serve 500k context (recurrent state or local-window attn)."""
+        kinds = set(self.block_pattern)
+        if kinds & {"rglru", "mlstm", "slstm"}:
+            return self.local_window > 0 or "attn" not in kinds or True
+        return self.local_window > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test-sized variant of the same family (one super-block repeat
+    or two, tiny widths, few experts, small vocab)."""
+    pat = cfg.block_pattern
+    heads = min(cfg.n_heads, 4)
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return cfg.replace(
+        n_layers=len(pat) * min(2, cfg.n_repeats) + len(cfg.block_tail),
+        d_model=128, n_heads=heads, n_kv_heads=kv, head_dim=32,
+        d_ff=256 if cfg.d_ff else 0, vocab=512,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        n_context_tokens=64 if cfg.n_context_tokens else 0,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        max_target_positions=64 if cfg.max_target_positions else 0,
+        local_window=min(cfg.local_window, 64) if cfg.local_window else 0,
+        quant=cfg.quant.with_(group=64),
+        grad_accum=1, remat="none",
+    )

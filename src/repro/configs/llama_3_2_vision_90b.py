@@ -1,0 +1,17 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers every 5th layer;
+vision frontend is a stub (input_specs provides patch embeddings).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=28672, vocab=128256,
+        block_pattern=("attn", "attn", "attn", "attn", "cross"),
+        n_context_tokens=1024,
+        tie_embeddings=False,
+        seq_shard=True,               # Megatron-SP: d=8192 x 100L activations
+        grad_accum=16,
+    )

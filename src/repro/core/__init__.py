@@ -1,0 +1,12 @@
+"""Core of the paper's contribution: transitive sparsity over bit-sliced GEMM.
+
+Modules:
+  bitslice   — S-bit 2's-complement ↔ binary planes ↔ T-bit TransRows
+  hasse      — subset partial order tables (prefixes/suffixes/levels)
+  scoreboard — faithful Alg.1/Alg.2 + balanced forest (static & dynamic SI)
+  transitive — lossless transitive GEMM execution (bit-exact oracle)
+  patterns   — ZR/TR/FR/PR classification, density & cycle statistics
+  costmodel  — Transitive Array cycle/energy model (Tbl. 1/2 config)
+  baselines  — BitFusion / ANT / Olive / Tender / BitVert analytic models
+"""
+from repro.core import bitslice, hasse, patterns, scoreboard, transitive  # noqa: F401

@@ -1,0 +1,305 @@
+"""Cycle/energy cost models: Transitive Array + 5 baseline accelerators.
+
+Replaces the paper's cycle-level simulator + ANT-derived baseline simulators
+(Sec. 5.1). All designs share: 28 nm, 500 MHz, a DRAM-bandwidth roofline,
+idealised double buffering (compute/DRAM overlap → time = max of the two).
+
+The TA model is *driven by the real scoreboard statistics* of the workload's
+actual (or sampled) TransRows — not an assumed density — so Fig. 9/10/12/13
+reproductions inherit the faithful Alg.1/Alg.2 behaviour.
+
+Array/PE configurations come straight from the paper's Tables 1-2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import numpy as np
+
+from repro.core import energy as E
+from repro.core import bitslice
+from repro.core.patterns import TileStats, tile_stats
+from repro.core.scoreboard import dynamic_scoreboard
+
+__all__ = ["Gemm", "AcceleratorModel", "TransitiveArrayModel",
+           "BitFusionModel", "AntModel", "OliveModel", "TenderModel",
+           "BitVertModel", "RunResult", "sample_subtile_stats", "BASELINES"]
+
+DRAM_GBPS = 128.0          # off-chip bandwidth shared by all designs
+
+
+@dataclasses.dataclass(frozen=True)
+class Gemm:
+    """One GEMM workload: out(n, m) += W(n, k) @ X(k, m)."""
+    n: int
+    k: int
+    m: int
+    w_bits: int = 8
+    a_bits: int = 8
+    name: str = ""
+
+    @property
+    def macs(self) -> int:
+        return self.n * self.k * self.m
+
+    @property
+    def dram_bytes(self) -> int:
+        return (self.n * self.k * self.w_bits // 8
+                + self.k * self.m * self.a_bits // 8
+                + self.n * self.m * 2)          # 16-bit requantized output
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    name: str
+    cycles: float
+    seconds: float
+    energy: E.EnergyTally
+
+    def speedup_over(self, other: "RunResult") -> float:
+        return other.seconds / self.seconds
+
+
+def _dram_cycles(g: Gemm) -> float:
+    return g.dram_bytes / (DRAM_GBPS * 1e9) * E.FREQ_HZ
+
+
+class AcceleratorModel:
+    """Base: compute-roofline vs DRAM-roofline with per-design hooks."""
+    name = "base"
+
+    def compute_cycles(self, g: Gemm) -> float:
+        raise NotImplementedError
+
+    def pe_energy_pj(self, g: Gemm) -> float:
+        raise NotImplementedError
+
+    def buffer_energy_pj(self, g: Gemm) -> float:
+        # Output-stationary systolic reuse: weights re-read per m-tile,
+        # activations per n-tile, outputs accumulated on-chip.
+        tn, tm = self.tile_nm()
+        w_reads = g.n * g.k * (g.w_bits / 8) * math.ceil(g.m / tm)
+        a_reads = g.k * g.m * (g.a_bits / 8) * math.ceil(g.n / tn)
+        out_rw = 2 * g.n * g.m * 4
+        return (w_reads + a_reads + out_rw) * E.PJ_SRAM_BYTE
+
+    def tile_nm(self) -> tuple[int, int]:
+        raise NotImplementedError
+
+    def run_gemm(self, g: Gemm) -> RunResult:
+        cyc = max(self.compute_cycles(g), _dram_cycles(g))
+        sec = cyc / E.FREQ_HZ
+        tally = E.EnergyTally(
+            pe=self.pe_energy_pj(g),
+            buffer=self.buffer_energy_pj(g),
+            dram=g.dram_bytes * E.PJ_DRAM_BYTE,
+            static=(E.MW_STATIC_CORE + E.MW_STATIC_DRAM) * 1e-3 * sec * 1e12)
+        return RunResult(self.name, cyc, sec, tally)
+
+    def run(self, gemms: list[Gemm]) -> RunResult:
+        total_c, total_s, tally = 0.0, 0.0, E.EnergyTally()
+        for g in gemms:
+            r = self.run_gemm(g)
+            total_c += r.cycles
+            total_s += r.seconds
+            tally = tally + r.energy
+        return RunResult(self.name, total_c, total_s, tally)
+
+
+# --------------------------------------------------------------------------
+# Baselines (array shapes & PE types from Table 2)
+# --------------------------------------------------------------------------
+
+class _UniformPEModel(AcceleratorModel):
+    """Dense PE array; throughput scales with precision decomposition."""
+    rows = cols = 0
+    pe_bits = 8            # native PE operand width
+
+    def _decompose(self, g: Gemm) -> float:
+        """Cycles per MAC from splitting operands onto native-width PEs."""
+        return (math.ceil(max(g.w_bits, self.pe_bits) / self.pe_bits)
+                * math.ceil(max(g.a_bits, self.pe_bits) / self.pe_bits))
+
+    def macs_per_cycle(self, g: Gemm) -> float:
+        return self.rows * self.cols / self._decompose(g)
+
+    def compute_cycles(self, g: Gemm) -> float:
+        # ceil-tiled utilisation
+        eff_n = math.ceil(g.n / self.rows) * self.rows
+        eff_m = math.ceil(g.m / self.cols) * self.cols
+        return eff_n * g.k * eff_m / (self.rows * self.cols) * self._decompose(g)
+
+    def _pe_mac_pj(self) -> float:
+        return {4: E.PJ_MAC_4, 8: E.PJ_MAC_8, 16: E.PJ_MAC_16}[self.pe_bits]
+
+    def pe_energy_pj(self, g: Gemm) -> float:
+        return g.macs * self._decompose(g) * self._pe_mac_pj()
+
+    def tile_nm(self) -> tuple[int, int]:
+        return self.rows, self.cols
+
+
+class BitFusionModel(_UniformPEModel):
+    """Bit-level composable 8-bit PEs, 28x32 (Table 2)."""
+    name = "bitfusion"
+    rows, cols, pe_bits = 28, 32, 8
+
+
+class AntModel(_UniformPEModel):
+    """Adaptive 4-bit datatype PEs, 36x64; 8-bit ops decompose 2x2."""
+    name = "ant"
+    rows, cols, pe_bits = 36, 64, 4
+
+
+class OliveModel(_UniformPEModel):
+    """Outlier-victim-pair 4-bit PEs, 32x48; outliers absorbed in-place."""
+    name = "olive"
+    rows, cols, pe_bits = 32, 48, 4
+
+
+class TenderModel(_UniformPEModel):
+    """4-bit PEs, 30x48; no mixed precision (4-bit only, Sec. 5.4)."""
+    name = "tender"
+    rows, cols, pe_bits = 30, 48, 4
+
+
+class BitVertModel(_UniformPEModel):
+    """BBS bi-directional bit-sparsity, 16x30 8-bit PEs, >=50% bit skip.
+
+    ``overhead`` (bit-column imbalance + binary-pruning bookkeeping) is
+    calibrated so BitVert lands at its own reported 1.9x over Olive on LLMs
+    (quoted in Sec. 5.5), instead of the idealised 2x-skip upper bound.
+    """
+    name = "bitvert"
+    rows, cols, pe_bits = 16, 30, 8
+    bit_sparsity = 0.5
+    overhead = 1.31
+
+    def _decompose(self, g: Gemm) -> float:
+        act = math.ceil(max(g.a_bits, 8) / 8)
+        wgt = math.ceil(max(g.w_bits, 8) / 8)
+        return act * wgt * (1.0 - self.bit_sparsity) * self.overhead
+
+
+# --------------------------------------------------------------------------
+# Transitive Array (Table 1: 6 units, T=8, 256 TransRows, 8x32 PPE/APE)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SubtileProfile:
+    """Mean per-sub-tile statistics measured from real scoreboards."""
+    ppe_cycles: float        # max-lane PPE ops (incl. outlier tail)
+    ape_cycles: float        # max-lane APE ops
+    ppe_ops: float           # total PPE adds (energy)
+    ape_ops: float           # total APE accumulations (energy)
+    n_rows: int              # TransRows per sub-tile (<= 256)
+
+    @property
+    def cycles(self) -> float:
+        sb = self.n_rows / 8 + math.log2(max(self.n_rows, 2)) ** 2 / 8
+        return max(self.ppe_cycles, self.ape_cycles, sb)
+
+
+def sample_subtile_stats(w: np.ndarray, w_bits: int, t: int = 8,
+                         n_rows: int = 256, max_tiles: int = 512,
+                         seed: int = 0) -> SubtileProfile:
+    """Bit-slice (a sample of) a weight matrix into 256-TransRow sub-tiles
+    and run the dynamic scoreboard on them (Sec. 5.1: we extract real
+    tensors; sampling keeps the model tractable; stats concentrate fast)."""
+    rows = bitslice.transrow_matrix(np.asarray(w), w_bits, t)   # (S, N, K/t)
+    flat = rows.transpose(2, 1, 0).reshape(-1)                   # col-major rows
+    n_sub = len(flat) // n_rows
+    tiles = flat[:n_sub * n_rows].reshape(n_sub, n_rows)
+    if n_sub > max_tiles:
+        sel = np.random.default_rng(seed).choice(n_sub, max_tiles, replace=False)
+        tiles = tiles[sel]
+    st = tile_stats(dynamic_scoreboard(tiles, t))
+    return SubtileProfile(
+        ppe_cycles=float(st.ppe_cycles.mean()),
+        ape_cycles=float(st.ape_cycles.mean()),
+        ppe_ops=float(st.ppe_ops.mean()),
+        ape_ops=float(st.ape_ops.mean()),
+        n_rows=n_rows)
+
+
+def random_subtile_profile(w_bits: int, t: int = 8, n_rows: int = 256,
+                           tiles: int = 256, seed: int = 0) -> SubtileProfile:
+    """Profile on uniform random data (Sec. 5.9's random baseline)."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-(1 << (w_bits - 1)), 1 << (w_bits - 1),
+                     size=(tiles * n_rows // w_bits, t))
+    return sample_subtile_stats(w, w_bits, t, n_rows, max_tiles=tiles)
+
+
+class TransitiveArrayModel(AcceleratorModel):
+    """6 TA units; each sub-tile = 256 TransRows x T=8 k-cols x 32 m-cols."""
+    name = "transarray"
+    units = 6
+    t = 8
+    m_tile = 32
+    max_rows = 256
+
+    def __init__(self, profile: SubtileProfile | None = None, w_bits: int = 8):
+        self.w_bits = w_bits
+        self.profile = profile or random_subtile_profile(w_bits)
+
+    def _subtiles(self, g: Gemm) -> float:
+        rows_per = self.max_rows // g.w_bits          # weight rows per sub-tile
+        return (math.ceil(g.n / rows_per) * math.ceil(g.k / self.t)
+                * math.ceil(g.m / self.m_tile))
+
+    def compute_cycles(self, g: Gemm) -> float:
+        # Sec. 4.5: PPE/APE split into halves for 4-bit activations (2x
+        # throughput); 16-bit activations take 2 passes.
+        act_scale = max(g.a_bits / 8.0, 0.5)
+        return self._subtiles(g) * self.profile.cycles / self.units * act_scale
+
+    def pe_energy_pj(self, g: Gemm) -> float:
+        ns = self._subtiles(g)
+        per = (self.profile.ppe_ops * self.m_tile * E.PJ_ADD_12
+               + self.profile.ape_ops * self.m_tile * E.PJ_ADD_24)
+        sb = self.profile.n_rows * 8 * E.PJ_ADD_8     # scoreboard table ops
+        return ns * (per + sb)
+
+    def buffer_energy_pj(self, g: Gemm) -> float:
+        """Fig. 11: buffer traffic dominates TA's own breakdown.
+
+        Prefix psums are 12-bit (2 B) in small distributed banks (REG cost);
+        inputs broadcast through the Benes net; output partials accumulate in
+        the double buffer (REG) and the 24-bit row results drain to the
+        output SRAM once per sub-tile.
+        """
+        ns = self._subtiles(g)
+        psum = (self.profile.ppe_ops + self.profile.ape_ops) * self.m_tile * 2
+        outs_accum = (self.max_rows / self.w_bits) * self.m_tile * 8
+        inputs = self.profile.ppe_ops * self.m_tile * 1
+        weights = self.profile.n_rows * 1
+        out_drain = (self.max_rows / self.w_bits) * self.m_tile * 4
+        return ns * ((psum + outs_accum + inputs) * E.PJ_REG_BYTE
+                     + (weights + out_drain) * E.PJ_SRAM_BYTE)
+
+    def tile_nm(self) -> tuple[int, int]:
+        return self.max_rows // self.w_bits, self.m_tile
+
+
+BASELINES = {
+    "bitfusion": BitFusionModel,
+    "ant": AntModel,
+    "olive": OliveModel,
+    "tender": TenderModel,
+    "bitvert": BitVertModel,
+}
+
+
+def core_area_mm2() -> dict[str, float]:
+    """Computation-core areas (Table 2 reproduction)."""
+    ta = (6 * (8 * 32) * (E.AREA_TA_PPE + E.AREA_TA_APE)
+          + 6 * E.AREA_TA_NOC + E.AREA_TA_SCOREBOARD)
+    return {
+        "transarray": ta / 1e6,
+        "bitfusion": 28 * 32 * E.AREA_BITFUSION_PE / 1e6,
+        "ant": 36 * 64 * E.AREA_ANT_PE / 1e6,
+        "olive": 32 * 48 * E.AREA_OLIVE_PE / 1e6,
+        "bitvert": 16 * 30 * E.AREA_BITVERT_PE / 1e6,
+        "tender": 30 * 48 * E.AREA_TENDER_PE / 1e6,
+    }

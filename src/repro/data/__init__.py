@@ -1,0 +1,2 @@
+"""Data pipeline substrate."""
+from repro.data.pipeline import SyntheticLM, batch_specs  # noqa: F401

@@ -1,0 +1,171 @@
+"""Mesh-agnostic checkpointing with atomic commits and async save.
+
+Format: <dir>/step_<N>/
+  manifest.json    — tree structure, shapes, dtypes, step, wall time
+  <leaf-id>.npy    — full (unsharded) array per leaf
+
+Checkpoints store *logical* arrays, so restore works under ANY mesh — the
+elastic-scaling path (DESIGN.md §4): a job restarted with a different chip
+count rebuilds its mesh and reshards on load via
+``jax.make_array_from_callback`` (each device reads only its slice).
+
+Atomicity: write into ``.tmp-step_<N>``, fsync files, then rename. A
+``latest`` marker file is updated last. Partially-written checkpoints are
+never visible and are garbage-collected on the next save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_SEP = "::"
+_NUMPY_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+                 "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+_BITS_DTYPE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _decode(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _NUMPY_NATIVE or str(arr.dtype) == dtype_str:
+        return arr
+    import ml_dtypes
+    return np.asarray(arr).view(np.dtype(getattr(ml_dtypes, dtype_str)))
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, blocking: bool = True) -> None:
+    """Device-get the tree and write an atomic checkpoint."""
+    flat, _ = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "time": time.time(), "leaves": {}}
+        for i, (k, a) in enumerate(sorted(host.items())):
+            fname = f"leaf_{i:05d}.npy"
+            dtype = str(a.dtype)
+            if dtype not in _NUMPY_NATIVE:
+                # ml_dtypes (bfloat16, fp8, ...) don't survive np.save —
+                # store the raw bits and reinterpret on load.
+                a = a.view(_BITS_DTYPE[a.dtype.itemsize])
+            np.save(os.path.join(tmp, fname), a)
+            manifest["leaves"][k] = {
+                "file": fname, "shape": list(a.shape), "dtype": dtype}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(ckpt_dir, "latest.tmp"), "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(os.path.join(ckpt_dir, "latest.tmp"),
+                   os.path.join(ckpt_dir, "latest"))
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    marker = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(marker):
+        return None
+    step = int(open(marker).read().strip())
+    if os.path.isdir(os.path.join(ckpt_dir, f"step_{step:08d}")):
+        return step
+    return None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Load a checkpoint into the structure of ``target_tree``.
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding — when
+    given, each array is materialised shard-by-shard under the *current*
+    mesh (elastic reshard). Otherwise arrays land as host-local.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = _flatten(target_tree)
+    flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = {}
+    for key, ref in flat_t.items():
+        meta = manifest["leaves"][key]
+        raw = np.load(os.path.join(path, meta["file"]), mmap_mode="r")
+        arr = _decode(raw, meta["dtype"])
+        assert tuple(arr.shape) == tuple(ref.shape), (key, arr.shape, ref.shape)
+        if key in flat_s and flat_s[key] is not None:
+            sh = flat_s[key]
+            out[key] = jax.make_array_from_callback(
+                arr.shape, sh, lambda idx, a=arr: np.asarray(a[idx]))
+        else:
+            out[key] = jax.numpy.asarray(np.asarray(arr)).astype(ref.dtype)
+    leaves = [out[k] for k in sorted(flat_t)]
+    ordered = [out[k] for k in flat_t]
+    del leaves
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+class CheckpointManager:
+    """Keep-latest-K manager with async save and restart discovery."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    def save(self, step: int, tree):
+        self.wait()
+        self._pending = save(self.dir, step, tree,
+                             blocking=not self.async_save)
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        if not os.path.isdir(self.dir):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, target_tree, shardings=None):
+        self.wait()
+        step = latest_step(self.dir)
+        if step is None:
+            return None, 0
+        return restore(self.dir, step, target_tree, shardings), step

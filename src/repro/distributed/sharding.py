@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules → PartitionSpecs / constraints.
+
+Logical axes:
+  batch   → ("pod", "data")   data parallelism (pod = DCN-level DP)
+  heads   → "model"           tensor parallelism over attention heads
+  kv_heads→ "model"           (replicated when GQA kv count not divisible)
+  ffn     → "model"           tensor parallelism over FFN inner dim
+  vocab   → "model"           sharded embedding / logits
+  experts → "model"           expert parallelism
+  kv_seq  → "model"           sequence parallelism for decode KV caches
+  seq     → "model" iff cfg.seq_shard (Megatron-SP activations)
+  fsdp    → "data"            ZeRO-3-ish parameter sharding on the DP axis
+
+``shard(x, *logical_axes)`` applies a sharding constraint only when a mesh
+with the needed axis names is ambient (jit under ``with mesh:``) and the
+dimension is divisible — so the same model code runs on 1 CPU device in
+tests and on the 512-chip production mesh in the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["RULES", "spec", "shard", "mesh_axis_size"]
+
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "kv_seq": ("model",),
+    "seq_sp": ("model",),
+    "fsdp": ("data",),
+    "none": (),
+}
+
+
+def _ambient_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def mesh_axis_size(name: str) -> int:
+    m = _ambient_mesh()
+    if m is None or name not in m.axis_names:
+        return 1
+    return m.shape[name]
+
+
+def spec(*logical_axes: str | None, shape: tuple[int, ...] | None = None) -> P:
+    """PartitionSpec from logical axis names (None → replicated dim).
+
+    When ``shape`` is given, axes whose mesh extent does not divide the dim
+    are dropped (replicated) — e.g. 8 GQA kv heads on a 16-way model axis.
+    """
+    m = _ambient_mesh()
+    parts = []
+    for i, name in enumerate(logical_axes):
+        if name is None or name == "none":
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in RULES[name]
+                          if m is not None and a in m.axis_names)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            size = 1
+            for a in mesh_axes:
+                size *= m.shape[a]
+            if shape[i] % size:
+                parts.append(None)
+                continue
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh; no-op without one."""
+    if _ambient_mesh() is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    s = spec(*logical_axes, shape=x.shape)
+    if all(p is None for p in s):
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding rules (Megatron TP + ZeRO-3 FSDP on the data axis)
+# --------------------------------------------------------------------------
+
+# row-parallel linears: contraction (input) dim carries the TP shard
+_ROW_PARALLEL = {"wo", "down", "w_out"}
+# leaves sharded over experts on "model" (+ FSDP on a wide inner dim)
+_EXPERT = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_logical(path_keys: list[str], shape) -> tuple[str | None, ...]:
+    name = None
+    for k in reversed(path_keys):
+        if k not in ("w", "qw", "sg"):
+            name = k
+            break
+    ndim = len(shape)
+    lead = (None,) * (ndim - 2)                    # scan-stacked axes
+
+    if name in ("embed", "unembed"):
+        return ("vocab", "fsdp")
+    if name in _EXPERT and ndim >= 3:
+        # (R?, E, d_in, d_out): experts on model, last dim ZeRO-3
+        logical = [None] * ndim
+        logical[ndim - 3] = "experts"
+        logical[ndim - 1] = "fsdp"
+        return tuple(logical)
+    if ndim < 2:
+        return (None,) * ndim                      # norms, scalars, lam
+    if name == "router":
+        return lead + (None, None)
+    if name in _ROW_PARALLEL:
+        return lead + ("fsdp", "heads")            # (out, in): in = model
+    # column-parallel default: (out, in) with out on model, in on data
+    return lead + ("heads", "fsdp")
+
+
+def param_specs(params, fsdp: bool = True) -> object:
+    """Pytree of PartitionSpecs for a params/opt-state tree.
+
+    Layout convention: qlinear weights are (d_out, d_in) (possibly with
+    leading stacked scan axes). Column-parallel weights shard d_out on
+    "model"; row-parallel ({wo, down, w_out}) shard d_in on "model"; the
+    other big dim takes ZeRO-3 ("data") where divisible. MoE expert stacks
+    shard experts on "model" and their widest dim on "data"; scales/norms
+    replicate.
+
+    ``fsdp=False`` drops the ZeRO-3 ("data") axis — the serving layout:
+    weights stay TP-resident instead of being all-gathered every step
+    (EXPERIMENTS.md §Perf iteration 1).
+    """
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        logical = _leaf_logical(keys, leaf.shape)
+        if not fsdp:
+            logical = tuple(None if ax == "fsdp" else ax for ax in logical)
+        return spec(*logical, shape=leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical GEMM/scan hot spots.
+
+  transitive_gemm — the paper's result-reuse dataflow (split-LUT doubling),
+                    multiplication-free, VPU-oriented (ASIC-faithful).
+  w4a8_gemm       — fused group-dequant int8 MXU GEMM (TPU-native hot path).
+  rg_lru          — blocked linear-recurrence scan for recurrent archs.
+
+Each kernel has a pure-jnp oracle in ref.py and is validated in interpret
+mode across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers for the Pallas kernels (padding, batching, fallback).
+
+``interpret`` defaults to auto: Pallas-TPU lowering on TPU backends,
+interpret mode elsewhere (the CPU container validates kernel semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.transitive_gemm import transitive_gemm_pallas
+from repro.kernels.w4a8_gemm import w4a8_gemm_pallas
+from repro.kernels.rg_lru import rg_lru_pallas
+
+__all__ = ["transitive_gemm", "transitive_gemm_grouped", "w4a8_gemm",
+           "rg_lru", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def transitive_gemm(qx: jnp.ndarray, qw: jnp.ndarray, *, w_bits: int = 8,
+                    t: int = 8, interpret: bool | None = None) -> jnp.ndarray:
+    """int32 [qx (..., K)] @ [qw (N, K)]^T via the transitive LUT kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    batch = qx.shape[:-1]
+    k = qx.shape[-1]
+    n = qw.shape[0]
+    x2 = qx.reshape(-1, k)
+    m = x2.shape[0]
+    bm = 128 if m >= 128 else 8
+    bn = 64 if n >= 64 else 8
+    bk = 256 if k % 256 == 0 else t
+    x2 = _pad_to(x2, 0, bm)
+    qwp = _pad_to(qw, 0, bn)
+    out = transitive_gemm_pallas(x2, qwp, w_bits=w_bits, t=t, bm=bm, bn=bn,
+                                 bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(batch + (n,))
+
+
+def transitive_gemm_grouped(xg: jnp.ndarray, wg: jnp.ndarray, *,
+                            w_bits: int = 8, t: int = 8,
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """xg (..., G, g) x wg (N, G, g) -> (..., G, N) int32 group partials."""
+    G = xg.shape[-2]
+    outs = [transitive_gemm(xg[..., gi, :], wg[:, gi, :], w_bits=w_bits, t=t,
+                            interpret=interpret) for gi in range(G)]
+    return jnp.stack(outs, axis=-2)
+
+
+def w4a8_gemm(qx: jnp.ndarray, sx: jnp.ndarray, qw: jnp.ndarray,
+              sg: jnp.ndarray, *, group: int = 128,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """f32 (..., N): fused group-dequant GEMM (MXU hot path)."""
+    if interpret is None:
+        interpret = default_interpret()
+    batch = qx.shape[:-1]
+    k = qx.shape[-1]
+    n = qw.shape[0]
+    x2 = qx.reshape(-1, k)
+    s2 = sx.reshape(-1, 1)
+    m = x2.shape[0]
+    bm = 128 if m >= 128 else 8
+    bn = 128 if n >= 128 else 8
+    x2 = _pad_to(x2, 0, bm)
+    s2 = _pad_to(s2, 0, bm)
+    qwp = _pad_to(qw, 0, bn)
+    sgp = _pad_to(sg, 0, bn)
+    bk = 512 if k % 512 == 0 else group
+    out = w4a8_gemm_pallas(x2, s2, qwp, sgp, group=group, bm=bm, bn=bn,
+                           bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(batch + (n,))
+
+
+def rg_lru(x: jnp.ndarray, a: jnp.ndarray, h0: jnp.ndarray, *,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """Blocked linear recurrence h_t = a_t h_{t-1} + x_t over (B, S, D)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, s, d = x.shape
+    bb = 8 if b % 8 == 0 else 1
+    bs = 256 if s % 256 == 0 else s
+    bd = 256 if d % 256 == 0 else d
+    return rg_lru_pallas(x, a, h0, bb=bb, bs=bs, bd=bd, interpret=interpret)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact, shape-flexible).
+
+The transitive references execute the paper's result-reuse dataflow with a
+*dense doubling LUT*: per T-wide k-tile, all 2^T subset sums of the input
+rows are built in T vectorised concat-add steps —
+``LUT[p] = LUT[p & (p-1)] + x[lsb(p)]`` — i.e. the complete Hasse graph with
+every node's prefix at distance 1 (DESIGN.md §2). Weight TransRows then
+gather their subset sum and shift-accumulate across bit planes with
+2's-complement signs. This is bit-exact with the plain int matmul.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitslice
+
+__all__ = ["lut_build_ref", "transitive_matmul_ref",
+           "transitive_matmul_grouped_ref", "w4a8_matmul_ref", "rg_lru_ref"]
+
+
+def lut_build_ref(xt: jnp.ndarray) -> jnp.ndarray:
+    """Subset-sum LUT by doubling. xt (..., t) int -> (..., 2^t) int32."""
+    t = xt.shape[-1]
+    lut = jnp.zeros(xt.shape[:-1] + (1,), jnp.int32)
+    for b in range(t):
+        lut = jnp.concatenate([lut, lut + xt[..., b:b + 1].astype(jnp.int32)],
+                              axis=-1)
+    return lut
+
+
+def _transrows(qw: jnp.ndarray, w_bits: int, t: int) -> jnp.ndarray:
+    """(N, K) int -> (S, N, K//t) uint32 TransRow patterns (jit-safe)."""
+    planes = bitslice.bit_planes_jnp(qw.astype(jnp.int32), w_bits)
+    return bitslice.pack_transrows_jnp(planes, t)
+
+
+def transitive_matmul_ref(qx: jnp.ndarray, qw: jnp.ndarray,
+                          w_bits: int = 8, t: int = 8) -> jnp.ndarray:
+    """int32 [qx (..., K)] @ [qw (N, K)]^T via transitive-reuse execution."""
+    k = qx.shape[-1]
+    n = qw.shape[0]
+    assert qw.shape[1] == k and k % t == 0, (qx.shape, qw.shape, t)
+    rows = _transrows(qw, w_bits, t)                     # (S, N, J)
+    signs = jnp.asarray(bitslice.plane_signs(w_bits), jnp.int32)
+    xt = qx.reshape(qx.shape[:-1] + (k // t, t))
+    lut = lut_build_ref(xt)                              # (..., J, 2^t)
+    out = jnp.zeros(qx.shape[:-1] + (n,), jnp.int32)
+    j_idx = jnp.arange(k // t)
+    for s in range(w_bits):
+        # gather LUT[..., j, rows[s, n, j]] and reduce over j
+        g = lut[..., j_idx[None, :], rows[s]]            # (..., N, J)
+        out = out + signs[s] * g.sum(-1)
+    return out
+
+
+def transitive_matmul_grouped_ref(xg: jnp.ndarray, wg: jnp.ndarray,
+                                  w_bits: int = 8, t: int = 8) -> jnp.ndarray:
+    """Grouped variant: xg (..., G, g) x wg (N, G, g) -> (..., G, N) int32."""
+    n, G, g = wg.shape
+    outs = []
+    for gi in range(G):
+        outs.append(transitive_matmul_ref(xg[..., gi, :], wg[:, gi, :],
+                                          w_bits, t))
+    return jnp.stack(outs, axis=-2)
+
+
+def w4a8_matmul_ref(qx: jnp.ndarray, sx: jnp.ndarray, qw: jnp.ndarray,
+                    sg: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Group-dequant GEMM oracle: qx (M, K) i8, sx (M, 1) f32,
+    qw (N, K) i8, sg (N, K//group) f32 -> (M, N) f32."""
+    m, k = qx.shape
+    n, G = sg.shape[0], sg.shape[1]
+    g = k // G
+    xg = qx.reshape(m, G, g)
+    wg = qw.reshape(n, G, g)
+    part = jnp.einsum("mgi,ngi->mgn", xg, wg,
+                      preferred_element_type=jnp.int32)
+    y = jnp.einsum("mgn,ng->mn", part.astype(jnp.float32), sg)
+    return (y * sx).astype(out_dtype)
+
+
+def rg_lru_ref(x: jnp.ndarray, a: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """Linear recurrence oracle: h_t = a_t * h_{t-1} + x_t.
+
+    x, a: (B, S, D); h0: (B, D). Returns h (B, S, D) (f32 math).
+    """
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+    import jax
+    xs = (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(x, 1, 0).astype(jnp.float32))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)

@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json + results/calib.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--update]
+  --update rewrites the AUTOGEN blocks inside EXPERIMENTS.md in place.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+
+
+def _fmt(v, digits=2):
+    return f"{v:.{digits}e}" if isinstance(v, float) else str(v)
+
+
+def dryrun_table(path="results/dryrun.json") -> str:
+    recs = sorted(json.load(open(path)),
+                  key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    rows = ["| arch | shape | mesh | status | compile s | arg GB/dev | "
+            "temp GB/dev | HLO GF/dev | coll MB/dev | #coll |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            note = r.get("reason", r.get("error", ""))[:60]
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']}: {note} | | | | | | |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f} | "
+            f"{r['arg_bytes_per_dev']/2**30:.2f} | "
+            f"{r['temp_bytes_per_dev']/2**30:.2f} | "
+            f"{r['hlo_flops_per_dev']/1e9:.1f} | "
+            f"{r['collectives']['total']/2**20:.1f} | "
+            f"{r['collectives']['count']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(path="results/calib.json") -> str:
+    recs = [r for r in json.load(open(path)) if r["status"] == "ok"]
+    recs.sort(key=lambda r: (r["shape"], r["arch"]))
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | bound s | roofline frac | useful (6ND+attn/HLO) |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['t_compute_s'])} | "
+            f"{_fmt(r['t_memory_s'])} | {_fmt(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {_fmt(r['bound_s'])} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{min(r['useful_flops_ratio'], 9.99):.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true")
+    args = ap.parse_args()
+    blocks = {"DRYRUN": dryrun_table(), "ROOFLINE": roofline_table()}
+    if not args.update:
+        for name, tbl in blocks.items():
+            print(f"==== {name} ====\n{tbl}\n")
+        return
+    text = open("EXPERIMENTS.md").read()
+    for name, tbl in blocks.items():
+        text = re.sub(
+            f"<!-- AUTOGEN:{name} -->.*?<!-- /AUTOGEN:{name} -->",
+            f"<!-- AUTOGEN:{name} -->\n{tbl}\n<!-- /AUTOGEN:{name} -->",
+            text, flags=re.S)
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e-class chip):
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_wire_bytes_per_device / link_bw
+
+cost_analysis() reports the per-partition (per-device) module, so its
+flops/bytes are already per-chip. Collective bytes come from parsing the
+post-SPMD HLO text; per-op wire-byte factors are the standard ring
+approximations (documented next to _COLL_FACTOR).
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+# TPU v5e-class constants (per chip) — from the task spec.
+HW = {
+    "peak_flops": 197e12,        # bf16
+    "hbm_bw": 819e9,             # bytes/s
+    "link_bw": 50e9,             # bytes/s per ICI link
+}
+
+# wire-bytes ≈ factor × parsed tensor bytes (ring-collective approximations;
+# all-reduce moves ~2x the payload, gather/scatter/a2a/permute ~1x)
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RX = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|s4|u4|pred)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(fragment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RX.findall(fragment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum wire bytes per collective kind from post-partitioning HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_FACTOR}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for kind, factor in _COLL_FACTOR.items():
+            marker = f" {kind}("
+            if marker not in line:
+                continue
+            # result types are left of the opcode; reduce-scatter wire
+            # traffic scales with its operand (the unscattered input)
+            lhs, _, rhs = line.partition(marker)
+            frag = rhs if kind == "reduce-scatter" else lhs
+            out[kind] += factor * _tensor_bytes(frag)
+            out["count"] += 1
+            break
+    out["total"] = sum(v for k, v in out.items()
+                       if k in _COLL_FACTOR)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict[str, float]:
+    t_compute = flops_per_dev / HW["peak_flops"]
+    t_memory = bytes_per_dev / HW["hbm_bw"]
+    t_coll = coll_bytes_per_dev / HW["link_bw"]
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom[0],
+        "bound_s": total,
+        "roofline_fraction": (t_compute / total) if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) plus the
+    attention/cache quadratic terms (which 6ND omits but are real useful
+    work — decisive for decode against a 32k cache)."""
+    n_params_active = _active_params(cfg)
+    s = shape.seq_len
+    if cfg.max_target_positions:
+        s = min(s, cfg.max_target_positions)
+    b = shape.global_batch
+    pattern = tuple(cfg.block_pattern) * cfg.n_repeats + tuple(cfg.block_tail)
+    n_attn = sum(k == "attn" for k in pattern)
+    n_cross = sum(k == "cross" for k in pattern)
+    h, hd, nc = cfg.n_heads, cfg.hd, cfg.n_context_tokens
+    eff = min(s, cfg.local_window) if cfg.local_window else s
+
+    if shape.kind == "train":
+        tokens = s * b
+        # causal scores+pv fwd = 2·B·S·eff·H·hd; train ≈ 3x fwd
+        attn = n_attn * 6.0 * b * s * eff * h * hd \
+            + n_cross * 12.0 * b * s * nc * h * hd
+        return 6.0 * n_params_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = s * b
+        attn = n_attn * 2.0 * b * s * eff * h * hd \
+            + n_cross * 4.0 * b * s * nc * h * hd
+        return 2.0 * n_params_active * tokens + attn
+    # decode: one token against the cache
+    attn = n_attn * 4.0 * b * eff * h * hd + n_cross * 4.0 * b * nc * h * hd
+    return 2.0 * n_params_active * b + attn
+
+
+def _active_params(cfg) -> float:
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+    mlp_dense = 3 * d * ff
+    n = 0.0
+    for i, kind in enumerate(tuple(cfg.block_pattern) * cfg.n_repeats
+                             + tuple(cfg.block_tail)):
+        if kind in ("attn", "cross"):
+            n += attn
+        elif kind == "rglru":
+            n += 5 * d * d
+        elif kind == "mlstm":
+            n += 3 * d * (h * hd) + (h * hd) * d + 2 * d * h
+        elif kind == "slstm":
+            n += 9 * d * d
+        if kind in ("attn", "cross", "rglru") and ff:
+            if cfg.n_experts and kind == "attn":
+                n += 3 * d * ff * (cfg.top_k + cfg.n_shared_experts)
+            else:
+                n += mlp_dense
+    n += 2 * v * d if not cfg.tie_embeddings else v * d
+    if cfg.is_encdec:
+        n += cfg.encoder_layers * (attn + mlp_dense)
+    return n

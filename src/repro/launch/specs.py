@@ -1,0 +1,172 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+No device allocation happens here: params/opt/caches come from
+jax.eval_shape, batches from ShapeDtypeStructs, shardings from the logical
+rules in distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import param_specs, spec
+from repro.models.model import Model
+from repro.optim import AdamW
+from repro.quant import QuantConfig
+
+__all__ = ["serve_config", "train_cell_specs", "serve_cell_specs",
+           "named", "cache_specs"]
+
+
+def serve_config(cfg: ModelConfig, w_bits: int = 4) -> ModelConfig:
+    """Serving variant: the paper's technique on — PTQ W4A8 linears
+    (per-channel epilogue scales at scale) + dynamic int8 attention."""
+    return cfg.replace(
+        quant=QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=0),
+        quant_attention=not cfg.is_encdec,
+        kv_cache_bits=8 if not cfg.is_encdec else 16,
+        remat="none")
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree)
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, axes) -> int:
+    shape = dict(mesh.shape)
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= shape.get(a, 1)
+    return n
+
+
+def _fit(parts, shape, mesh) -> P:
+    """Drop spec axes whose mesh extent does not divide the dim."""
+    fitted = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            fitted.append(None)
+        elif dim % _axis_size(mesh, part) == 0:
+            fitted.append(part)
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+def effective_accum(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """grad_accum capped so each microbatch still covers the DP extent."""
+    dp = _axis_size(mesh, _batch_axes(mesh))
+    accum = max(1, min(cfg.grad_accum, shape.global_batch // max(dp, 1)))
+    while shape.global_batch % (accum * dp) and accum > 1:
+        accum -= 1
+    return accum
+
+
+def cache_specs(cfg: ModelConfig, caches_shape, mesh):
+    """Sharding rules for serve caches: KV heads on "model" when divisible,
+    else the cache sequence axis (sequence parallelism); recurrent state
+    shards its feature axis."""
+    model_n = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") \
+        else dict(mesh.shape)["model"]
+    dp = _batch_axes(mesh)
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shp = leaf.shape
+        if name in ("k", "v", "ks", "vs") and len(shp) >= 4:
+            # (R?, B, S, KV, HD|1) — values and their KV8 scales
+            lead = (None,) * (len(shp) - 4)
+            if shp[-2] % model_n == 0:
+                parts = (*lead, dp, None, "model", None)
+            elif shp[-3] % model_n == 0:
+                parts = (*lead, dp, "model", None, None)
+            else:
+                parts = (*lead, dp, None, None, None)
+        elif name == "C" and len(shp) >= 5:     # mLSTM (R?, B, H, dk, dv)
+            lead = (None,) * (len(shp) - 4)
+            parts = (*lead, dp, "model", None, None)
+        elif name == "n" and len(shp) >= 4:     # mLSTM (R?, B, H, dk)
+            lead = (None,) * (len(shp) - 3)
+            parts = (*lead, dp, "model", None)
+        else:                                   # recurrent vectors (R?, B, D)
+            lead = (None,) * (len(shp) - 2)
+            parts = (*lead, dp, "model")
+        return _fit(parts, shp, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def train_cell_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(model, opt, state_shapes, batch_shapes, state_shardings,
+    batch_shardings) with grad_accum fitted to the mesh's DP extent."""
+    from repro.train.train_step import make_optimizer, state_shape
+    from repro.data.pipeline import batch_specs
+    accum = effective_accum(cfg, shape, mesh)
+    cfg = cfg.replace(grad_accum=accum)
+    model = Model(cfg)
+    opt = make_optimizer(cfg)
+    sshape = state_shape(model, opt)
+    sspec = {"params": param_specs(sshape["params"]),
+             "opt": {"m": param_specs(sshape["opt"]["m"]),
+                     "v": param_specs(sshape["opt"]["v"]),
+                     "count": P()},
+             "step": P()}
+    bshape = batch_specs(cfg, shape)
+    dp = _batch_axes(mesh)
+    bspec = jax.tree.map(
+        lambda a: _fit((None, dp) + (None,) * (a.ndim - 2), a.shape, mesh),
+        bshape)
+    return model, opt, sshape, bshape, named(mesh, sspec), named(mesh, bspec)
+
+
+def _serve_fsdp(pshape, mesh) -> bool:
+    """Serving keeps weights TP-resident (no ZeRO-3 gather per step) unless
+    the model is too large for model-parallel shards alone (~12 GB/chip)."""
+    total = sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                for l in jax.tree_util.tree_leaves(pshape))
+    model_n = dict(mesh.shape).get("model", 1)
+    return (total / model_n) > 12e9
+
+
+def serve_cell_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Specs for decode cells: (params, caches, token, step)."""
+    model = Model(cfg)
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspec = param_specs(pshape, fsdp=_serve_fsdp(pshape, mesh))
+    b = shape.global_batch
+    cshape = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    cspec = cache_specs(cfg, cshape, mesh)
+    dp = _batch_axes(mesh)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tspec = _fit((dp, None), tok.shape, mesh)
+    return (model, pshape, cshape, tok,
+            named(mesh, pspec), named(mesh, cspec),
+            NamedSharding(mesh, tspec))
+
+
+def prefill_cell_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    model = Model(cfg)
+    pshape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspec = param_specs(pshape, fsdp=_serve_fsdp(pshape, mesh))
+    b = shape.global_batch
+    s = shape.seq_len
+    if cfg.max_target_positions:
+        s = min(s, cfg.max_target_positions)
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    dp = _batch_axes(mesh)
+    bspec = {"tokens": _fit((dp, None), (b, s), mesh)}
+    if cfg.n_context_tokens or cfg.is_encdec:
+        batch["context"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_context_tokens, cfg.d_model), jnp.float32)
+        bspec["context"] = _fit((dp, None, None), batch["context"].shape,
+                                mesh)
+    return (model, pshape, batch, s,
+            named(mesh, pspec), named(mesh, bspec))

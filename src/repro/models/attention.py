@@ -1,0 +1,338 @@
+"""Attention: GQA self-attention (global/local/causal), cross-attention,
+RoPE (incl. chatglm-style partial rotary), qk-norm, chunked (flash-style)
+softmax for long sequences, rolling KV caches for local windows, and the
+paper's dynamic int8 quantized attention GEMMs (Sec. 5.7: K/V treated as
+weights with per-tile dynamic scoreboards → per-token dynamic quantization
+on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.quant import quantize_per_token
+
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 2048        # direct softmax below, chunked scan above
+Q_CHUNK = 1024                # query-chunk size for the flash-style path
+ATTN_UNROLL: int | bool = 1   # roofline calibration unrolls the chunk scan
+                              # (HloCostAnalysis counts while bodies once)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    out = (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+    return out.astype(x.dtype)      # keep activations in the working dtype
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         partial: bool = False) -> jnp.ndarray:
+    """x (B, S, H, D), positions (B, S). partial=True rotates only the first
+    half of head_dim (chatglm's 2d RoPE keeps half the dims positional)."""
+    d = x.shape[-1]
+    rot_d = d // 2 if partial else d
+    freqs = theta ** (-jnp.arange(0, rot_d, 2, dtype=jnp.float32) / rot_d)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, rd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot_d].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    out = out.reshape(xr.shape).astype(x.dtype)
+    if partial:
+        out = jnp.concatenate([out, x[..., rot_d:]], -1)
+    return out
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, D) -> (B, S, KV*groups, D)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _scores(q, k, scale, quant: bool):
+    """einsum('bqhd,bkhd->bhqk'), optionally with dynamic-int8 operands —
+    the TPU mapping of the paper's dynamic-scoreboard attention (Sec. 5.7:
+    K/V treated as weights, quantized per tile at runtime)."""
+    if quant:
+        qq, sq = quantize_per_token(q)                    # (B,Sq,H,1)
+        kk, sk = quantize_per_token(k)                    # (B,Sk,H,1)
+        s32 = jnp.einsum("bqhd,bkhd->bhqk", qq, kk,
+                         preferred_element_type=jnp.int32)
+        sq_b = jnp.moveaxis(sq, 2, 1)                     # (B,H,Sq,1)
+        sk_b = jnp.moveaxis(sk, 2, 1)[..., 0][:, :, None, :]  # (B,H,1,Sk)
+        return s32.astype(jnp.float32) * sq_b * sk_b * scale
+    return jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+
+
+def _pv(p, v, quant: bool):
+    """P (B,H,Sq,Sk) @ V (B,Sk,H,D) -> (B,Sq,H,D), optionally int8."""
+    if quant:
+        qp, sp = quantize_per_token(p)                    # rows over Sk
+        sv = jnp.max(jnp.abs(v), axis=1, keepdims=True) / 127.0 + 1e-8
+        qv = jnp.clip(jnp.round(v / sv), -128, 127).astype(jnp.int8)
+        o32 = jnp.einsum("bhqk,bkhd->bqhd", qp, qv,
+                         preferred_element_type=jnp.int32)
+        return o32.astype(jnp.float32) * jnp.moveaxis(sp, 1, 2) * sv
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def attend_full(q, k, v, mask, scale, quant: bool = False):
+    """Direct softmax attention. q (B,Sq,H,D), k/v (B,Sk,KV*,D) pre-repeat."""
+    s = _scores(q, k, scale, quant)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _pv(p, v, quant)
+
+
+def attend_chunked(q, k, v, scale, causal: bool, window: int,
+                   q_offset: int | jnp.ndarray = 0,
+                   kv_len: jnp.ndarray | None = None):
+    """Q-chunked attention: scan over query chunks with a rematerialised
+    chunk body. Each chunk sees full K/V (cheap: K/V are (B,Sk,H,D) in the
+    working dtype), so no online-softmax state is carried — the (Cq, Sk)
+    score tile is transient in both forward AND backward (flash-style
+    memory: the scan body is jax.checkpoint'ed, so AD recomputes scores per
+    chunk instead of stashing the (Sq, Sk) attention matrix).
+
+    q (B,Sq,H,D); k/v (B,Sk,H,D) already GQA-repeated.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    cq = Q_CHUNK if sq % Q_CHUNK == 0 else sq
+    nc = sq // cq
+    qc = jnp.moveaxis(q.reshape(b, nc, cq, h, d), 1, 0)
+    kpos = jnp.arange(sk)
+
+    def body(_, xs):
+        qch, ci = xs
+        qpos = q_offset + ci * cq + jnp.arange(cq)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qch, k).astype(jnp.float32) * scale
+        ok = jnp.ones((cq, sk), bool)
+        if causal:
+            ok &= qpos[:, None] >= kpos[None, :]
+        if window:
+            ok &= qpos[:, None] - kpos[None, :] < window
+        if kv_len is not None:
+            ok &= kpos[None, :] < kv_len
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), None,
+                           (qc, jnp.arange(nc)), unroll=ATTN_UNROLL)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)  # (B, Sq, H, D)
+
+
+# --------------------------------------------------------------------------
+# Block-level self/cross attention with cache handling
+# --------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    from repro.quant import linear_init
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    qcfg = cfg.quant
+    p = {
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "wq": linear_init(ks[0], cfg.d_model, h * hd, qcfg, cfg.dtype),
+        "wk": linear_init(ks[1], cfg.d_model, kv * hd, qcfg, cfg.dtype),
+        "wv": linear_init(ks[2], cfg.d_model, kv * hd, qcfg, cfg.dtype),
+        "wo": linear_init(ks[3], h * hd, cfg.d_model, qcfg, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    window: int = 0, cross: bool = False):
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_bits == 8 and not cross:
+        # KV8: int8 cache + per-position scales (QServe-style; the paper's
+        # "K/V as weights" under dynamic quantization, Sec. 5.7)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "vs": jnp.zeros(shape[:-1] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def apply_attn(params, x, cfg: ModelConfig, *, positions, cache=None,
+               step=None, causal=True, window=0, context=None,
+               prefill=False):
+    """Self- or cross-attention block body (pre-norm, residual outside).
+
+    Modes: train (cache=None, prefill=False), prefill (cache given — zeros —
+    filled with the prompt's K/V and returned), decode (cache given,
+    step-wise update). Returns (out, new_cache).
+    """
+    from repro.quant import linear_apply
+    qcfg = cfg.quant
+    b, sq, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = linear_apply(params["wq"], xn, qcfg).reshape(b, sq, h, hd)
+    decode_cross = context is not None and cache is not None and not prefill
+    if decode_cross:
+        k = v = None                          # context K/V already cached
+    else:
+        src = context if context is not None else xn
+        k = linear_apply(params["wk"], src, qcfg) \
+            .reshape(b, src.shape[1], kv, hd)
+        v = linear_apply(params["wv"], src, qcfg) \
+            .reshape(b, src.shape[1], kv, hd)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+    q = shard(q, "batch", None, "heads", None)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        if k is not None:
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if context is None:                       # RoPE only for self-attention
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_2d)
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_2d)
+
+    scale = hd ** -0.5
+    new_cache = cache
+    groups = h // kv
+
+    if cache is not None and prefill:
+        # write the prompt's K/V into the (possibly rolling) cache
+        size = cache["k"].shape[1]
+        src_len = k.shape[1]
+        take = min(size, src_len)
+        slots = (jnp.arange(take) + (src_len - take)) % size
+        if cache["k"].dtype == jnp.int8:
+            qk, ks = quantize_per_token(k[:, -take:])
+            qv, vs = quantize_per_token(v[:, -take:])
+            new_cache = {"k": cache["k"].at[:, slots].set(qk),
+                         "v": cache["v"].at[:, slots].set(qv),
+                         "ks": cache["ks"].at[:, slots].set(ks),
+                         "vs": cache["vs"].at[:, slots].set(vs)}
+        else:
+            ck = cache["k"].at[:, slots].set(
+                k[:, -take:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(
+                v[:, -take:].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+
+    if context is not None and not decode_cross:      # cross, full pass
+        kf = _repeat_kv(k, groups)
+        vf = _repeat_kv(v, groups)
+        mask = jnp.ones((b, 1, sq, kf.shape[1]), bool)
+        out = attend_full(q, kf, vf, mask, scale, cfg.quant_attention)
+    elif cache is None or prefill:            # train / prefill full pass
+        kf = _repeat_kv(k, groups)
+        vf = _repeat_kv(v, groups)
+        if sq > CHUNK_THRESHOLD:
+            out = attend_chunked(q, kf, vf, scale, causal, window)
+        else:
+            qp = positions[:, :, None]
+            kp = positions[:, None, :]
+            mask = jnp.ones((b, sq, sq), bool)
+            if causal:
+                mask &= qp >= kp
+            if window:
+                mask &= qp - kp < window
+            out = attend_full(q, kf, vf, mask[:, None], scale,
+                              cfg.quant_attention)
+    else:                                     # decode step against cache
+        size = cache["k"].shape[1]
+        # Sequence-parallel decode (DESIGN.md §4): when GQA kv heads don't
+        # divide the model axis, the cache is sharded on its sequence axis.
+        # Without explicit constraints SPMD "involuntarily rematerializes"
+        # (all-gathers) the cache every step — §Perf hillclimb 1.
+        from repro.distributed.sharding import mesh_axis_size
+        model_n = mesh_axis_size("model")
+        seq_mode = (model_n > 1 and kv % model_n != 0
+                    and size % model_n == 0)
+
+        def cshard(t):
+            return shard(t, "batch", "kv_seq", None, None) if seq_mode else t
+        int8_cache = cache["k"].dtype == jnp.int8
+        cks = cvs = None
+        if decode_cross:
+            ck, cv = cache["k"], cache["v"]
+            kv_len = size
+        else:
+            slot = step % size if window else step
+
+            def dus(buf, val):
+                return jax.lax.dynamic_update_slice(
+                    buf, val, (0, slot) + (0,) * (buf.ndim - 2))
+            if int8_cache:
+                qk_new, ks_new = quantize_per_token(k)
+                qv_new, vs_new = quantize_per_token(v)
+                ck = cshard(dus(cache["k"], qk_new))
+                cv = cshard(dus(cache["v"], qv_new))
+                cks = cshard(dus(cache["ks"], ks_new.astype(jnp.float32)))
+                cvs = cshard(dus(cache["vs"], vs_new.astype(jnp.float32)))
+                new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs}
+            else:
+                ck = cshard(dus(cache["k"], k.astype(cache["k"].dtype)))
+                cv = cshard(dus(cache["v"], v.astype(cache["v"].dtype)))
+                new_cache = {"k": ck, "v": cv}
+            kv_len = jnp.minimum(step + 1, size)
+        # grouped-head attention: contract against the cache directly in
+        # (KV, G) layout — no jnp.repeat materialisation of G x the cache
+        # (§Perf hillclimb 1, iteration 3). With a KV8 cache (iteration 4)
+        # the int8 values + stored scales feed the int GEMM directly.
+        qg = q.reshape(b, sq, kv, groups, hd)
+        valid = jnp.arange(size)[None, :] < kv_len
+        if cfg.quant_attention:
+            qq, sqs = quantize_per_token(qg)             # (B,1,KV,G,1)
+            if int8_cache:
+                kk, sks = ck, cks
+            else:
+                kk, sks = quantize_per_token(ck)         # (B,S,KV,1)
+            s32 = jnp.einsum("bqkgd,bskd->bkgqs", qq, kk,
+                             preferred_element_type=jnp.int32)
+            sk_b = sks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+            s = (s32.astype(jnp.float32) * scale
+                 * jnp.moveaxis(sqs, 1, 3)                # (B,KV,G,1,1)
+                 * sk_b)                                  # (B,KV,1,1,S)
+        elif int8_cache:
+            kf = ck.astype(jnp.float32) * cks
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                           kf) * scale
+        else:
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck) \
+                .astype(jnp.float32) * scale
+        if seq_mode:
+            s = shard(s, "batch", None, None, None, "kv_seq")
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if cfg.quant_attention:
+            if int8_cache:
+                # fold the per-position V scales into P before quantizing —
+                # the int8 contraction then needs no per-s rescale.
+                vs_b = cvs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+                qp, sps = quantize_per_token(p * vs_b)
+                qv = cv
+                sv_out = 1.0
+            else:
+                qp, sps = quantize_per_token(p)
+                sv = jnp.max(jnp.abs(cv), axis=1, keepdims=True) / 127. + 1e-8
+                qv = jnp.clip(jnp.round(cv / sv), -128, 127).astype(jnp.int8)
+                sv_out = sv[:, :, :, None, :]
+            o32 = jnp.einsum("bkgqs,bskd->bqkgd", qp, qv,
+                             preferred_element_type=jnp.int32)
+            out = (o32.astype(jnp.float32)
+                   * jnp.moveaxis(sps, -1, 1) * sv_out)
+        elif int8_cache:
+            vf = cv.astype(jnp.float32) * cvs
+            out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+        else:
+            out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cv.dtype), cv)
+        out = out.reshape(b, sq, h, hd)
+
+    out = out.reshape(b, sq, h * hd)
+    y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,285 @@
+"""Model assembly: scan-over-super-blocks decoder (all 10 families), with
+train / prefill / decode entry points and layer-stacked KV/recurrent caches.
+
+A config's ``block_pattern`` defines one super-block; the super-block is
+scanned ``n_repeats`` times (keeps HLO size O(pattern), essential for
+512-device compiles). Pattern elements:
+  attn   — GQA self-attention (+ MLP if d_ff > 0)
+  cross  — cross-attention to ``context`` embeddings (+ MLP)
+  rglru  — RG-LRU recurrent block (+ MLP)
+  mlstm / slstm — xLSTM blocks (self-contained, no MLP)
+Encoder-decoder (whisper): a separate non-causal encoder stack feeds
+``context``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import blocks as B
+
+Params = dict[str, Any]
+
+# Calibration knob (launch/calibrate.py): XLA's HloCostAnalysis counts a
+# while-loop body ONCE regardless of trip count, so roofline calibration
+# lowers shallow model variants with scans fully unrolled. 1 = rolled.
+SCAN_UNROLL: int | bool = 1
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=SCAN_UNROLL)
+
+
+def _init_superblock(key, cfg: ModelConfig, pattern) -> Params:
+    p = {}
+    keys = jax.random.split(key, 2 * len(pattern))
+    gelu = cfg.family == "audio"
+    for i, kind in enumerate(pattern):
+        k1, k2 = keys[2 * i], keys[2 * i + 1]
+        if kind == "attn":
+            p[f"b{i}"] = A.init_attn(k1, cfg)
+        elif kind == "cross":
+            p[f"b{i}"] = A.init_attn(k1, cfg, cross=True)
+        elif kind == "rglru":
+            p[f"b{i}"] = B.init_rglru(k1, cfg)
+        elif kind == "mlstm":
+            p[f"b{i}"] = B.init_mlstm(k1, cfg)
+        elif kind == "slstm":
+            p[f"b{i}"] = B.init_slstm(k1, cfg)
+        else:
+            raise ValueError(kind)
+        wants_mlp = (kind in ("attn", "cross", "rglru") and cfg.d_ff
+                     and (cfg.mlp_after is None or i in cfg.mlp_after))
+        if wants_mlp:
+            if cfg.family == "moe" and kind == "attn":
+                p[f"m{i}"] = B.init_moe(k2, cfg)
+            else:
+                p[f"m{i}"] = B.init_mlp(k2, cfg, gelu=gelu)
+    return p
+
+
+def _apply_superblock(bp: Params, x, cfg: ModelConfig, pattern, *,
+                      positions, caches=None, step=None, causal=True,
+                      context=None, prefill=False):
+    """One super-block pass; returns (x, new_caches or None)."""
+    new_caches = {} if caches is not None else None
+    sp = "seq_sp" if cfg.seq_shard else None
+    for i, kind in enumerate(pattern):
+        cache_i = caches.get(f"c{i}") if caches is not None else None
+        if kind in ("attn", "cross"):
+            window = cfg.local_window if kind == "attn" else 0
+            y, nc = A.apply_attn(
+                bp[f"b{i}"], x, cfg, positions=positions, cache=cache_i,
+                step=step, causal=causal and kind == "attn", window=window,
+                context=context if kind == "cross" else None,
+                prefill=prefill)
+        elif kind == "rglru":
+            y, nc = B.apply_rglru(bp[f"b{i}"], x, cfg, cache=cache_i,
+                                  prefill=prefill)
+        elif kind == "mlstm":
+            y, nc = B.apply_mlstm(bp[f"b{i}"], x, cfg, cache=cache_i,
+                                  prefill=prefill)
+        elif kind == "slstm":
+            y, nc = B.apply_slstm(bp[f"b{i}"], x, cfg, cache=cache_i,
+                                  prefill=prefill)
+        else:
+            raise ValueError(kind)
+        x = shard(x + y, "batch", sp, None)
+        if f"m{i}" in bp:
+            if cfg.family == "moe" and kind == "attn":
+                x = x + B.apply_moe(bp[f"m{i}"], x, cfg)
+            else:
+                x = x + B.apply_mlp(bp[f"m{i}"], x, cfg)
+            x = shard(x, "batch", sp, None)
+        if new_caches is not None:
+            new_caches[f"c{i}"] = nc if nc is not None else cache_i
+    return x, new_caches
+
+
+class Model:
+    """Functional model: init / loss / prefill / decode_step."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern
+
+    # ---- init --------------------------------------------------------------
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        k_embed, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+        embed = (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(cfg.dtype)
+        bkeys = jax.random.split(k_blocks, cfg.n_repeats)
+        blocks = jax.vmap(
+            lambda k: _init_superblock(k, cfg, self.pattern))(bkeys)
+        params: Params = {
+            "embed": embed,
+            "blocks": blocks,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = (jax.random.normal(
+                k_head, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+            ).astype(cfg.dtype)
+        if cfg.block_tail:
+            params["tail"] = _init_superblock(
+                jax.random.fold_in(k_blocks, 7), cfg, cfg.block_tail)
+        if cfg.is_encdec:
+            ecfg = cfg.replace(mlp_after=None)
+            ekeys = jax.random.split(k_enc, cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: _init_superblock(k, ecfg, ("attn",)))(ekeys)
+            params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return params
+
+    # ---- shared ------------------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.cfg.dtype)
+        return shard(x, "batch", None, None)
+
+    def _logits(self, params, x):
+        x = A.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        table = params.get("unembed", params["embed"])
+        logits = jax.lax.dot_general(
+            x, table.astype(x.dtype), (((x.ndim - 1,), (1,)), ((), ())))
+        return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+    def _encode(self, params, frames):
+        cfg = self.cfg.replace(mlp_after=None)
+        x = shard(frames.astype(cfg.dtype), "batch", None, None)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, bp):
+            y, _ = _apply_superblock(bp, carry, cfg, ("attn",),
+                                     positions=pos, causal=False)
+            return y, None
+        x, _ = _scan(body, x, params["encoder"])
+        return A.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _context(self, params, batch):
+        if self.cfg.is_encdec:
+            return self._encode(params, batch["context"])
+        if self.cfg.n_context_tokens:
+            return shard(batch["context"].astype(self.cfg.dtype),
+                         "batch", None, None)
+        return None
+
+    # ---- train -------------------------------------------------------------
+    def loss(self, params: Params, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        context = self._context(params, batch)
+        x = self._embed_tokens(params, tokens)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, bp):
+            y, _ = _apply_superblock(bp, carry, cfg, self.pattern,
+                                     positions=pos, context=context)
+            return y, None
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = _scan(body, x, params["blocks"])
+        if cfg.block_tail:
+            x, _ = _apply_superblock(params["tail"], x, cfg, cfg.block_tail,
+                                     positions=pos, context=context)
+        logits = self._logits(params, x)
+        # fused CE: no (B,S,V) log-softmax materialisation; the one-hot dot
+        # reduces over the vocab-sharded axis in place.
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        ll = jnp.einsum("...v,...v->...", logits, onehot)
+        return (lse - ll).mean()
+
+    # ---- serve -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.max_target_positions:
+            max_len = min(max_len, cfg.max_target_positions)
+
+        def one(kind):
+            if kind == "attn":
+                return A.init_attn_cache(cfg, batch, max_len,
+                                         cfg.local_window)
+            if kind == "cross":
+                return A.init_attn_cache(cfg, batch,
+                                         cfg.n_context_tokens or 1,
+                                         cross=True)
+            if kind == "rglru":
+                return B.cache_rglru(cfg, batch)
+            if kind == "mlstm":
+                return B.cache_mlstm(cfg, batch)
+            if kind == "slstm":
+                return B.cache_slstm(cfg, batch)
+            raise ValueError(kind)
+
+        def stack(tree):
+            return jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_repeats,) + a.shape, a.dtype),
+                tree)
+        caches = {"body": {f"c{i}": stack(one(kind))
+                           for i, kind in enumerate(self.pattern)}}
+        if cfg.block_tail:
+            caches["tail"] = {f"c{i}": one(kind)
+                              for i, kind in enumerate(cfg.block_tail)}
+        return caches
+
+    def prefill(self, params: Params, batch: dict, max_len: int):
+        """Process the prompt, fill caches; returns (last-pos logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        context = self._context(params, batch)
+        caches = self.init_cache(b, max_len)
+        x = self._embed_tokens(params, tokens)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(carry, xs):
+            bp, cache_slice = xs
+            y, nc = _apply_superblock(
+                bp, carry, cfg, self.pattern, positions=pos,
+                caches=cache_slice, context=context, prefill=True)
+            return y, nc
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, new_body = _scan(body, x, (params["blocks"], caches["body"]))
+        out = {"body": new_body}
+        if cfg.block_tail:
+            x, out["tail"] = _apply_superblock(
+                params["tail"], x, cfg, cfg.block_tail, positions=pos,
+                caches=caches["tail"], context=context, prefill=True)
+        logits = self._logits(params, x[:, -1:])
+        return logits, out
+
+    def decode_step(self, params: Params, caches, token, step):
+        """One decode step. token (B, 1) int32; step scalar int32 position."""
+        cfg = self.cfg
+        b = token.shape[0]
+        # context K/V live in the cross caches after prefill; only the
+        # stub-embedding shape is needed to signal cross blocks.
+        context = (jnp.zeros((b, cfg.n_context_tokens, cfg.d_model),
+                             cfg.dtype)
+                   if (cfg.n_context_tokens or cfg.is_encdec) else None)
+        if cfg.is_encdec and context is None:
+            context = jnp.zeros((b, 1, cfg.d_model), cfg.dtype)
+        x = self._embed_tokens(params, token)
+        pos = jnp.broadcast_to(step, (b, 1)).astype(jnp.int32)
+
+        def body(carry, xs):
+            bp, cache_slice = xs
+            y, nc = _apply_superblock(bp, carry, cfg, self.pattern,
+                                      positions=pos, caches=cache_slice,
+                                      step=step, context=context)
+            return y, nc
+        x, new_body = _scan(body, x, (params["blocks"], caches["body"]))
+        out = {"body": new_body}
+        if cfg.block_tail:
+            x, out["tail"] = _apply_superblock(
+                params["tail"], x, cfg, cfg.block_tail, positions=pos,
+                caches=caches["tail"], step=step, context=context)
+        logits = self._logits(params, x)
+        return logits, out

@@ -1,0 +1,3 @@
+"""Optimizer substrate (AdamW + schedules + grad utilities), optax-free."""
+from repro.optim.adamw import AdamW, OptState  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401

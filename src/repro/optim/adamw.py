@@ -1,0 +1,89 @@
+"""Functional AdamW with global-norm clipping and low-precision moments.
+
+``moment_dtype=bfloat16`` halves optimizer HBM (needed for the ~790B-param
+llama4 config to fit 16 GB/chip at 512 chips — a distributed-scale knob,
+see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState"]
+
+OptState = dict[str, Any]
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """AdamW; ``factored_v=True`` stores the second moment as Adafactor-style
+    row/col statistics for ndim>=2 leaves (O(n+m) instead of O(n*m)) — the
+    knob that lets ~790B-param configs fit optimizer state in HBM."""
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+    factored_v: bool = False
+
+    def _v_init(self, p):
+        if self.factored_v and p.ndim >= 2:
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, self.moment_dtype)
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(self._v_init, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state: OptState, params, lr) -> tuple[Any, OptState]:
+        count = state["count"] + 1
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        c1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            if isinstance(v, dict):                       # factored second
+                r = self.b2 * v["r"] + (1 - self.b2) * jnp.mean(g * g, -1)
+                c = self.b2 * v["c"] + (1 - self.b2) * jnp.mean(g * g, -2)
+                vhat = (r[..., None] * c[..., None, :]
+                        / jnp.maximum(jnp.mean(r, -1)[..., None, None], 1e-30))
+                new_v = {"r": r, "c": c}
+            else:
+                v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+                vhat = v32
+                new_v = v32.astype(self.moment_dtype)
+            step = (m32 / c1) / (jnp.sqrt(vhat / c2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return (new_p.astype(p.dtype), m32.astype(self.moment_dtype),
+                    new_v)
+
+        # flatten against the params structure so factored-v dicts stay
+        # whole leaves ({"r","c"}) rather than being descended into
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        res = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in res])
+        new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in res])
+        new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in res])
+        return new_params, {"m": new_m, "v": new_v, "count": count}

@@ -1,0 +1,15 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

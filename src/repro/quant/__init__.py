@@ -1,0 +1,9 @@
+"""Quantization substrate: group-wise symmetric PTQ/QAT + TransitiveLinear.
+
+Note: the ``quantize`` *module* holds the raw quantizers; only collision-free
+names are re-exported here.
+"""
+from repro.quant.quantize import (  # noqa: F401
+    absmax_scale, quantize_groupwise, dequantize_groupwise, fake_quant,
+    quantize_per_token)
+from repro.quant.qlinear import QuantConfig, linear_init, linear_apply  # noqa: F401

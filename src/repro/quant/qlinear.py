@@ -1,0 +1,123 @@
+"""TransitiveLinear — the paper's technique as a first-class linear layer.
+
+Three operating modes:
+  * ``none`` — plain dense matmul in the working dtype (FP baseline).
+  * ``qat``  — fake-quantized weights (straight-through), for training the
+               models that will later serve through the Transitive Array.
+  * ``ptq``  — weights stored as integers + scales; activations quantized
+               per-token at runtime; the integer GEMM runs through one of:
+      - ``int_dot``: dense int8 dot_general (int32 accumulation). The
+        MXU-native execution used by the full-scale dry-run.
+      - ``lut``:     pure-jnp dense doubling-LUT transitive execution
+                     (kernels/ref.py) — bit-exact with int_dot, the paper's
+                     result-reuse dataflow in software.
+      - ``pallas``:  the Pallas TPU kernel (kernels/transitive_gemm.py);
+                     interpret mode on CPU.
+
+All paths share the same quantization, so they agree bit-exactly on the
+int32 accumulator (property-tested).
+
+Layers are functional: ``linear_init`` builds a params dict,
+``linear_apply`` consumes it. Weight layout is (d_out, d_in) so the
+reduction axis is last (TransRows slice along it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+import repro.quant.quantize as Q
+
+__all__ = ["QuantConfig", "linear_init", "linear_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "none"        # none | qat | ptq
+    w_bits: int = 8
+    a_bits: int = 8
+    group: int = 128          # group size along d_in (exact paths / qat)
+    path: str = "int_dot"     # int_dot | lut | pallas
+    transrow_t: int = 8       # TransRow width for transitive paths
+
+    def with_(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _effective_group(cfg: QuantConfig, d_in: int) -> int:
+    g = cfg.group
+    if g <= 0 or d_in % g:
+        return d_in               # fall back to per-channel
+    return g
+
+
+def linear_init(key: jax.Array, d_in: int, d_out: int,
+                cfg: QuantConfig = QuantConfig(),
+                dtype=jnp.bfloat16) -> dict[str, Any]:
+    scale = 1.0 / (d_in ** 0.5)
+    w = jax.random.normal(key, (d_out, d_in), jnp.float32) * scale
+    if cfg.mode != "ptq":
+        return {"w": w.astype(dtype)}
+    g = _effective_group(cfg, d_in)
+    qw, sg = Q.quantize_groupwise(w, cfg.w_bits, g)
+    return {"qw": qw, "sg": sg.astype(jnp.float32)}
+
+
+def _int_matmul(qx: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
+    """int8 (..., K) x int8 (N, K) -> int32 (..., N)."""
+    return jax.lax.dot_general(
+        qx, qw, (((qx.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    qw, sg = params["qw"], params["sg"]
+    d_out, d_in = qw.shape
+    g = d_in // sg.shape[-1]
+    qx, sx = Q.quantize_per_token(x, cfg.a_bits)
+    if sg.shape[-1] == 1:
+        # per-channel: one dense int GEMM + epilogue scale
+        if cfg.path == "lut":
+            from repro.kernels import ref
+            y32 = ref.transitive_matmul_ref(qx, qw, cfg.w_bits, cfg.transrow_t)
+        elif cfg.path == "pallas":
+            from repro.kernels import ops
+            y32 = ops.transitive_gemm(qx, qw, w_bits=cfg.w_bits,
+                                      t=cfg.transrow_t)
+        else:
+            y32 = _int_matmul(qx, qw)
+        y = y32.astype(jnp.float32) * sx * sg[:, 0]
+    else:
+        # group-wise: per-group int partials rescaled in the epilogue —
+        # the VPU "integer scale factor per 128/T tile" of Sec. 4.5.
+        xg = qx.reshape(qx.shape[:-1] + (d_in // g, g))
+        wg = qw.reshape(d_out, d_in // g, g)
+        if cfg.path == "lut":
+            from repro.kernels import ref
+            part = ref.transitive_matmul_grouped_ref(xg, wg, cfg.w_bits,
+                                                     cfg.transrow_t)
+        elif cfg.path == "pallas":
+            from repro.kernels import ops
+            part = ops.transitive_gemm_grouped(xg, wg, w_bits=cfg.w_bits,
+                                               t=cfg.transrow_t)
+        else:
+            part = jnp.einsum("...gi,ngi->...gn", xg, wg,
+                              preferred_element_type=jnp.int32)
+        y = jnp.einsum("...gn,ng->...n", part.astype(jnp.float32), sg) * sx
+    return y.astype(x.dtype)
+
+
+def linear_apply(params: dict[str, Any], x: jnp.ndarray,
+                 cfg: QuantConfig = QuantConfig()) -> jnp.ndarray:
+    """y = x @ W^T under the configured quantization mode."""
+    if cfg.mode == "ptq":
+        return _ptq_apply(params, x, cfg)
+    w = params["w"]
+    if cfg.mode == "qat":
+        g = _effective_group(cfg, w.shape[-1])
+        w = Q.fake_quant(w, cfg.w_bits, g)
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (1,)), ((), ())))

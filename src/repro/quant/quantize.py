@@ -1,0 +1,78 @@
+"""Symmetric integer quantization (per-tensor / per-token / group-wise).
+
+Matches the paper's evaluation setup (Sec. 4.5/5.4): group-wise weight
+quantization with group size 128 (following QServe), per-token dynamic
+activation quantization, scales in fp32. All quantizers are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["absmax_scale", "quantize", "dequantize", "quantize_groupwise",
+           "dequantize_groupwise", "quantize_per_token", "fake_quant"]
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def absmax_scale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Symmetric absmax scale; keeps reduced dims."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / _qmax(bits)
+
+
+def quantize(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -_qmax(bits) - 1, _qmax(bits)).astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_groupwise(w: jnp.ndarray, bits: int, group: int = 128):
+    """Quantize ``w (..., K)`` with one scale per ``group`` along K.
+
+    Returns (q int8 (..., K), scales f32 (..., K//group)).
+    """
+    k = w.shape[-1]
+    if k % group:
+        raise ValueError(f"K={k} not divisible by group={group}")
+    wg = w.reshape(w.shape[:-1] + (k // group, group))
+    scale = absmax_scale(wg, bits, axis=-1)            # (..., K//g, 1)
+    q = quantize(wg, bits, scale)
+    return q.reshape(w.shape), scale[..., 0]
+
+
+def dequantize_groupwise(q: jnp.ndarray, scales: jnp.ndarray, group: int,
+                         dtype=jnp.float32) -> jnp.ndarray:
+    k = q.shape[-1]
+    qg = q.reshape(q.shape[:-1] + (k // group, group))
+    w = qg.astype(jnp.float32) * scales[..., None]
+    return w.reshape(q.shape).astype(dtype)
+
+
+def quantize_per_token(x: jnp.ndarray, bits: int = 8):
+    """Dynamic per-token activation quantization over the last axis."""
+    scale = absmax_scale(x, bits, axis=-1)             # (..., 1)
+    return quantize(x, bits, scale), scale
+
+
+@jax.custom_vjp
+def fake_quant(x: jnp.ndarray, bits: int, group: int):
+    q, s = quantize_groupwise(x, bits, group)
+    return dequantize_groupwise(q, s, group, x.dtype)
+
+
+def _fq_fwd(x, bits, group):
+    return fake_quant(x, bits, group), None
+
+
+def _fq_bwd(_, g):
+    return (g, None, None)          # straight-through estimator
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,3 @@
+"""Training/serving step factories and the fault-tolerant loop."""
+from repro.train.train_step import TrainState, make_train_step, make_optimizer  # noqa: F401
+from repro.train.serve_step import make_prefill, make_decode_step  # noqa: F401

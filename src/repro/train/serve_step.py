@@ -1,0 +1,39 @@
+"""Serving-step factories: prefill + decode (the paper's inference setting —
+quantized GEMMs through the Transitive Array path run here).
+
+``make_decode_step`` is the unit the decode_* / long_* dry-run shapes lower:
+one new token against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill(model: Model, max_len: int):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, token, step):
+        return model.decode_step(params, caches, token, step)
+    return decode_step
+
+
+def greedy_generate(model: Model, params, batch, max_len: int,
+                    n_steps: int):
+    """Prefill then greedy-decode n_steps tokens (example/driver path)."""
+    logits, caches = jax.jit(make_prefill(model, max_len))(params, batch)
+    step_fn = jax.jit(make_decode_step(model))
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    toks = [tok]
+    pos = batch["tokens"].shape[1]
+    for i in range(n_steps - 1):
+        logits, caches = step_fn(params, caches, tok, jnp.int32(pos + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,10 @@
+"""Shared test fixtures. NOTE: no XLA device-count flags here — smoke tests
+and benches must see the real (single) device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,53 @@
+"""Checkpoint: roundtrip, atomicity, GC, async, restart discovery."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import checkpoint as C
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (16, 8)),
+                       "blocks": {"b0": jnp.arange(10, dtype=jnp.int32)}},
+            "opt": {"m": jnp.ones((16, 8)), "count": jnp.int32(7)},
+            "step": jnp.int32(42)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    C.save(str(tmp_path), 100, t)
+    assert C.latest_step(str(tmp_path)) == 100
+    t2 = C.restore(str(tmp_path), 100, jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_gc_and_latest(tmp_path):
+    mgr = C.CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000020", "step_00000030"]
+    restored, step = mgr.restore_latest(jax.eval_shape(lambda: _tree()))
+    assert step == 30
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_tree(30)["params"]["w"]))
+
+
+def test_async_save(tmp_path):
+    mgr = C.CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert C.latest_step(str(tmp_path)) == 5
+
+
+def test_partial_write_invisible(tmp_path):
+    """A .tmp- dir (crashed mid-save) is never reported as latest."""
+    os.makedirs(tmp_path / ".tmp-step_00000099")
+    assert C.latest_step(str(tmp_path)) is None
+    C.save(str(tmp_path), 7, _tree())
+    assert C.latest_step(str(tmp_path)) == 7

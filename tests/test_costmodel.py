@@ -1,0 +1,79 @@
+"""Cost/energy/area model checks against the paper's published numbers."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import (AntModel, BitFusionModel, BitVertModel,
+                                  OliveModel, TransitiveArrayModel,
+                                  core_area_mm2, random_subtile_profile)
+from repro.core.workloads import llama_fc_gemms, llama_attention_gemms
+
+
+def test_area_matches_paper_table2():
+    areas = core_area_mm2()
+    # Table 2 values (mm^2)
+    want = {"transarray": 0.443, "bitfusion": 0.491, "ant": 0.484,
+            "olive": 0.490, "bitvert": 0.473, "tender": 0.474}
+    for k, v in want.items():
+        assert abs(areas[k] - v) < 0.01, (k, areas[k], v)
+    assert areas["transarray"] == min(areas.values())   # paper: lowest core
+
+
+@pytest.fixture(scope="module")
+def runs():
+    g8 = llama_fc_gemms("llama1-7b", w_bits=8)
+    g4 = llama_fc_gemms("llama1-7b", w_bits=4)
+    return {
+        "ta8": TransitiveArrayModel(random_subtile_profile(8), 8).run(g8),
+        "ta4": TransitiveArrayModel(random_subtile_profile(4), 4).run(g4),
+        "ant": AntModel().run(g8),
+        "olive": OliveModel().run(g8),
+        "bitvert": BitVertModel().run(g8),
+        "bitfusion": BitFusionModel().run(g8),
+    }
+
+
+def test_iso_precision_speedups(runs):
+    """Paper Sec. 5.5: TA-8b ~2.47x ANT, ~3.75x Olive, ~1.99x BitVert.
+    The modeled ratios must land in the right bands."""
+    assert 1.7 < runs["ta8"].speedup_over(runs["ant"]) < 3.3
+    assert 2.6 < runs["ta8"].speedup_over(runs["olive"]) < 5.0
+    assert 1.3 < runs["ta8"].speedup_over(runs["bitvert"]) < 2.7
+
+
+def test_iso_accuracy_speedups(runs):
+    """Paper: TA-4b ~4.91x ANT, ~7.46x Olive, ~3.97x BitVert."""
+    assert 3.4 < runs["ta4"].speedup_over(runs["ant"]) < 6.5
+    assert 5.2 < runs["ta4"].speedup_over(runs["olive"]) < 9.5
+    assert 2.6 < runs["ta4"].speedup_over(runs["bitvert"]) < 5.2
+
+
+def test_energy_direction(runs):
+    """TA-4b is more energy-efficient than every baseline (Fig. 10)."""
+    for k in ("ant", "olive", "bitfusion"):
+        assert runs[k].energy.total > runs["ta4"].energy.total, k
+
+
+def test_buffer_dominates_ta_breakdown(runs):
+    """Fig. 11: buffers are TA's largest energy component."""
+    e = runs["ta4"].energy
+    assert e.buffer > e.pe and e.buffer > e.dram
+
+
+def test_attention_speedup_positive(runs):
+    """Fig. 12: TA keeps a speedup on attention GEMMs; at seq 2048 both
+    designs are near compute-bound in our DRAM model so the compression
+    toward 1.54x the paper reports (their richer memory simulator) shows
+    up only partially — see EXPERIMENTS.md §Paper-validation."""
+    att = llama_attention_gemms("llama1-7b")
+    ta = TransitiveArrayModel(random_subtile_profile(8), 8).run(att)
+    ant = AntModel().run(att)
+    s_att = ta.speedup_over(ant)
+    s_fc = runs["ta8"].speedup_over(runs["ant"])
+    assert 1.0 <= s_att <= s_fc * 1.35
+
+
+def test_profile_matches_paper_stats():
+    p = random_subtile_profile(8)
+    assert 150 < p.ppe_ops < 180       # ~162 unique nodes + bridges
+    assert 250 < p.ape_ops <= 256
+    assert p.cycles >= 32              # >= APE floor of n_rows/T
