@@ -1,11 +1,18 @@
 """Kernel-level microbench (CPU container): (a) op-count ratios of the
 transitive dataflow vs dense / bit-sparse accumulation — the paper's actual
-speedup source; (b) interpret-mode correctness timing of the Pallas kernels;
-(c) HLO flops/bytes of the W4A8 MXU path vs a bf16 matmul at equal shape
-(the TPU-side memory win).
+speedup source; (b) wall-clock of the batched multi-tile engine
+(core/engine.py) vs the seed per-tile Python-loop walker
+(core/transitive_ref.py), split into plan (offline) and run (online);
+(c) interpret-mode correctness timing of the Pallas kernels; (d) HLO
+flops/bytes of the W4A8 MXU path vs a bf16 matmul at equal shape (the
+TPU-side memory win).
+
+``--smoke`` shrinks every shape for CI: a few seconds total, still
+exercising every code path end-to-end.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -13,17 +20,20 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, synth_weights, timed
+from repro.core.engine import BatchedTransitiveEngine
 from repro.core.transitive import transitive_gemm_stats
+from repro.core.transitive_ref import transitive_gemm_ref
 from repro.kernels import ops
 
 
-def run():
+def run(smoke: bool = False):
     t0 = time.perf_counter()
     rng = np.random.default_rng(0)
 
     # (a) op-count ratios (N=256-row sub-tiles, T=8, int8 weights)
-    w = synth_weights(256, 256, 8, seed=0)
-    x = rng.integers(-128, 128, (256, 32))
+    na = 64 if smoke else 256
+    w = synth_weights(na, na, 8, seed=0)
+    x = rng.integers(-128, 128, (na, 32))
     _, tot = transitive_gemm_stats(w, x, 8, 8)
     emit("kernel_opcount", 0.0,
          f"dense={tot['dense_ops']} bit={tot['bit_ops']} "
@@ -31,38 +41,67 @@ def run():
          f"reduction_vs_dense=x{tot['dense_ops']/max(tot['ppe_ops'], tot['ape_ops']):.2f} "
          f"(paper: 8x at T=8)")
 
-    # (b) interpret-mode kernel wall-times (correctness path, not perf)
-    qx = jnp.asarray(rng.integers(-128, 128, (128, 256)), jnp.int8)
-    qw = jnp.asarray(synth_weights(64, 256, 4), jnp.int8)
+    # (b) batched engine vs seed per-tile walker (ISSUE 1 acceptance:
+    # >= 5x on 256x256x256 int8; plan is reusable across activations)
+    nb = 64 if smoke else 256
+    w = synth_weights(nb, nb, 8, seed=1)
+    x = rng.integers(-128, 128, (nb, nb))
+    eng = BatchedTransitiveEngine(bits=8, t=8)
+    plan, us_plan = timed(lambda: eng.plan(w), reps=1)
+    out_run, us_run = timed(lambda: eng.run(plan, x), reps=1)
+    _, us_e2e = timed(lambda: eng(w, x), reps=1)
+    ref, us_ref = timed(lambda: transitive_gemm_ref(w, x, 8, 8),
+                        reps=1, warmup=0)
+    np.testing.assert_array_equal(out_run, ref)
+    np.testing.assert_array_equal(out_run,
+                                  w.astype(np.int64) @ x.astype(np.int64))
+    emit("kernel_engine_vs_ref", us_e2e,
+         f"{nb}x{nb}x{nb} int8 T=8: ref={us_ref:.0f}us plan={us_plan:.0f}us "
+         f"run={us_run:.0f}us speedup_e2e=x{us_ref/us_e2e:.1f} "
+         f"speedup_run=x{us_ref/us_run:.1f} (floor: 5x)")
+
+    # (c) interpret-mode kernel wall-times (correctness path, not perf)
+    mc, nc, kc = (16, 8, 64) if smoke else (128, 64, 256)
+    qx = jnp.asarray(rng.integers(-128, 128, (mc, kc)), jnp.int8)
+    qw = jnp.asarray(synth_weights(nc, kc, 4), jnp.int8)
     _, us = timed(lambda: jax.block_until_ready(
         ops.transitive_gemm(qx, qw, w_bits=4, t=8)))
-    emit("kernel_transitive_interpret", us, "128x64x256 w4 (interpret mode)")
+    emit("kernel_transitive_interpret", us,
+         f"{mc}x{nc}x{kc} w4 (interpret mode)")
 
-    sx = jnp.ones((128, 1), jnp.float32)
-    sg = jnp.ones((64, 2), jnp.float32)
-    _, us = timed(lambda: jax.block_until_ready(
-        ops.w4a8_gemm(qx, sx, qw, sg, group=128)))
-    emit("kernel_w4a8_interpret", us, "128x64x256 (interpret mode)")
+    if not smoke:
+        sx = jnp.ones((128, 1), jnp.float32)
+        sg = jnp.ones((64, 2), jnp.float32)
+        _, us = timed(lambda: jax.block_until_ready(
+            ops.w4a8_gemm(qx, sx, qw, sg, group=128)))
+        emit("kernel_w4a8_interpret", us, "128x64x256 (interpret mode)")
 
-    # (c) dry-lowered flops/bytes: W4A8 int path vs bf16 dense
-    m, n, k = 256, 512, 1024
-    def int_path(qx, qw):
-        return jax.lax.dot_general(qx, qw, (((1,), (1,)), ((), ())),
-                                   preferred_element_type=jnp.int32)
-    def bf16_path(a, b):
-        return a @ b.T
-    ca_int = jax.jit(int_path).lower(
-        jax.ShapeDtypeStruct((m, k), jnp.int8),
-        jax.ShapeDtypeStruct((n, k), jnp.int8)).compile().cost_analysis()
-    ca_bf = jax.jit(bf16_path).lower(
-        jax.ShapeDtypeStruct((m, k), jnp.bfloat16),
-        jax.ShapeDtypeStruct((n, k), jnp.bfloat16)).compile().cost_analysis()
-    emit("kernel_w4a8_vs_bf16_bytes", 0.0,
-         f"int8_bytes={ca_int.get('bytes accessed', 0):.0f} "
-         f"bf16_bytes={ca_bf.get('bytes accessed', 0):.0f} "
-         f"ratio={ca_bf.get('bytes accessed', 1)/max(ca_int.get('bytes accessed', 1),1):.2f}x")
-    emit("kernel_total", (time.perf_counter() - t0) * 1e6, "ok")
+        # (d) dry-lowered flops/bytes: W4A8 int path vs bf16 dense
+        m, n, k = 256, 512, 1024
+        def int_path(qx, qw):
+            return jax.lax.dot_general(qx, qw, (((1,), (1,)), ((), ())),
+                                       preferred_element_type=jnp.int32)
+        def bf16_path(a, b):
+            return a @ b.T
+        def cost(ca):
+            # old jax returns a per-device list of dicts, new jax one dict
+            return ca[0] if isinstance(ca, (list, tuple)) else ca
+        ca_int = cost(jax.jit(int_path).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((n, k), jnp.int8)).compile().cost_analysis())
+        ca_bf = cost(jax.jit(bf16_path).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.bfloat16),
+            jax.ShapeDtypeStruct((n, k), jnp.bfloat16)).compile().cost_analysis())
+        emit("kernel_w4a8_vs_bf16_bytes", 0.0,
+             f"int8_bytes={ca_int.get('bytes accessed', 0):.0f} "
+             f"bf16_bytes={ca_bf.get('bytes accessed', 0):.0f} "
+             f"ratio={ca_bf.get('bytes accessed', 1)/max(ca_int.get('bytes accessed', 1),1):.2f}x")
+    emit("kernel_total", (time.perf_counter() - t0) * 1e6,
+         "smoke" if smoke else "ok")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (seconds, not minutes)")
+    run(smoke=ap.parse_args().smoke)

@@ -1,0 +1,161 @@
+"""Batched multi-tile transitive execution engine (lossless fast path).
+
+The reference walker (core/transitive_ref.py) executes one k-tile and one
+Hasse node at a time in Python loops. This engine runs the same forest —
+bit-exactly — with three batched passes:
+
+  1. **plan(w)**: bit-slice ``w`` into TransRows, then build *all* ``K//T``
+     per-tile scoreboards in a single :func:`dynamic_scoreboard` call (it is
+     already vectorised over a leading tiles axis). The forest edges are
+     regrouped by Hamming level into flat (tile, node, prefix, diff-bit)
+     index arrays. This mirrors the paper's offline TransRow packing: a
+     plan depends only on the weights and is reused across activations.
+  2. **run(plan, x)** — forest execution: one vectorised numpy step per
+     Hamming level across all tiles simultaneously. Every executed node's
+     selected prefix is a covering (one-bit-cleared) subset, so all nodes
+     of level L depend only on level L-1 psums and can gather + scatter in
+     one fancy-indexed assignment. Outliers (and any prefix-less node) are
+     dispatched first via a direct subset-sum einsum.
+  3. **APE shift-accumulate**: per bit plane, one gather of the (tiles,
+     2^T, M) psum table at the TransRow indices and a sum over tiles,
+     weighted by the 2's-complement plane signs — the einsum-style
+     equivalent of the hardware's shifter + accumulator.
+
+Bit-exactness vs ``w.astype(i64) @ x.astype(i64)`` and vs the reference
+walker is enforced by tests/test_engine.py across random and adversarial
+weight patterns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bitslice, hasse
+from repro.core.scoreboard import (MAX_DISTANCE, ScoreboardInfo,
+                                   dynamic_scoreboard)
+
+__all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelStep:
+    """All forest edges of one Hamming level, across every tile."""
+    tile: np.ndarray      # (E,) int64 — tile index of each executed node
+    node: np.ndarray      # (E,) int64 — the node being computed
+    prefix: np.ndarray    # (E,) int64 — its covering prefix (level - 1)
+    bit: np.ndarray       # (E,) int64 — the single differing bit index
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Weight-only execution schedule — reusable across activations."""
+    t: int                     # TransRow width
+    bits: int                  # weight bit width S
+    n: int                     # output rows
+    k: int                     # reduction length
+    rows: np.ndarray           # (S, N, J) int64 TransRow values (APE gather)
+    si: ScoreboardInfo         # batched scoreboard over all J tiles
+    steps: tuple[LevelStep, ...]   # level-synchronous schedule, level 1..T
+    direct_tile: np.ndarray    # (D,) int64 — outlier / prefix-less nodes
+    direct_node: np.ndarray    # (D,) int64
+    direct_bits: np.ndarray    # (D, T) int64 {0,1} — their bit patterns
+    signs: np.ndarray          # (S,) int64 2's-complement plane weights
+
+    @property
+    def n_tiles(self) -> int:
+        return self.k // self.t
+
+
+class BatchedTransitiveEngine:
+    """Plan/run split over the whole (N, K) weight at once.
+
+    ``plan`` is the offline half (scoreboards + schedule from weights);
+    ``run`` is the online half (psums + shift-accumulate from activations).
+    ``__call__`` chains both for one-shot use.
+    """
+
+    def __init__(self, bits: int, t: int, max_distance: int = MAX_DISTANCE):
+        self.bits = bits
+        self.t = t
+        self.max_distance = max_distance
+
+    # -- offline: weights -> reusable schedule ---------------------------
+    def plan(self, w: np.ndarray) -> ExecutionPlan:
+        w = np.asarray(w)
+        n, k = w.shape
+        t = self.t
+        if k % t:
+            raise ValueError(f"K={k} not divisible by T={t}")
+        rows = bitslice.transrow_matrix(w, self.bits, t).astype(np.int64)
+        n_tiles = k // t
+        tile_rows = rows.transpose(2, 0, 1).reshape(n_tiles, -1)  # (J, S*N)
+        si = dynamic_scoreboard(tile_rows, t, self.max_distance)
+
+        executed = si.executed                       # (J, 2^T) bool
+        # Nodes executed without a relay prefix (shouldn't occur for a
+        # healthy scoreboard beyond level 1 roots, which use node 0) plus
+        # outliers are dispatched directly as subset sums of their bits.
+        prefixless = executed & (si.prefix < 0)
+        direct = si.outlier | prefixless
+        chained = executed & ~prefixless
+
+        node_levels = hasse.levels(t)[None, :]       # (1, 2^T)
+        lsb_of = np.full(1 << t, -1, dtype=np.int64)
+        lsb_of[1 << np.arange(t)] = np.arange(t)
+
+        steps = []
+        for lv in range(1, t + 1):
+            tl, nd = np.nonzero(chained & (node_levels == lv))
+            if tl.size == 0:
+                continue
+            pre = si.prefix[tl, nd]
+            diff = nd ^ pre
+            bit = lsb_of[diff]
+            # the balanced forest only emits covering (distance-1) edges;
+            # a -1 here would silently gather the wrong activation row, so
+            # fail loudly even under python -O
+            if not (bit >= 0).all():
+                raise ValueError("non-covering edge in scoreboard forest")
+            steps.append(LevelStep(tile=tl, node=nd.astype(np.int64),
+                                   prefix=pre.astype(np.int64), bit=bit))
+
+        d_tile, d_node = np.nonzero(direct)
+        d_bits = ((d_node[:, None] >> np.arange(t)) & 1).astype(np.int64)
+        return ExecutionPlan(t=t, bits=self.bits, n=n, k=k, rows=rows, si=si,
+                             steps=tuple(steps),
+                             direct_tile=d_tile.astype(np.int64),
+                             direct_node=d_node.astype(np.int64),
+                             direct_bits=d_bits,
+                             signs=bitslice.plane_signs(self.bits))
+
+    # -- online: activations through the planned forest ------------------
+    def run(self, plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x)
+        if x.ndim != 2 or x.shape[0] != plan.k:
+            raise ValueError(f"x must be (K={plan.k}, M), got {x.shape}")
+        m = x.shape[1]
+        t, n_tiles = plan.t, plan.n_tiles
+        size = 1 << t
+        xt = x.reshape(n_tiles, t, m).astype(np.int64)     # (J, T, M)
+
+        psum = np.zeros((n_tiles, size, m), dtype=np.int64)
+        if plan.direct_tile.size:
+            psum[plan.direct_tile, plan.direct_node] = np.einsum(
+                "dt,dtm->dm", plan.direct_bits, xt[plan.direct_tile])
+        for step in plan.steps:        # level-synchronous forest execution
+            psum[step.tile, step.node] = (psum[step.tile, step.prefix]
+                                          + xt[step.tile, step.bit])
+
+        # APE shift-accumulate: gather every TransRow's psum and reduce
+        # over tiles, one vectorised pass per bit plane.
+        flat = psum.reshape(n_tiles * size, m)
+        gather_idx = np.arange(n_tiles, dtype=np.int64)[None, None, :] * size \
+            + plan.rows                                     # (S, N, J)
+        out = np.zeros((plan.n, m), dtype=np.int64)
+        for s in range(plan.bits):
+            out += plan.signs[s] * flat[gather_idx[s]].sum(axis=1)
+        return out
+
+    def __call__(self, w: np.ndarray, x: np.ndarray) -> np.ndarray:
+        return self.run(self.plan(w), x)

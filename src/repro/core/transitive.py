@@ -1,101 +1,46 @@
-"""Lossless transitive GEMM execution (the oracle for the whole system).
+"""Lossless transitive GEMM — public entry points, engine-backed.
 
-Executes ``W @ X`` for an S-bit integer weight ``W (N, K)`` and integer
-input ``X (K, M)`` by walking the Scoreboard's prefix forest exactly as the
-Transitive Array hardware would (Fig. 8):
+``transitive_gemm`` executes ``W @ X`` for an S-bit integer weight
+``W (N, K)`` and integer input ``X (K, M)`` through the batched multi-tile
+engine (core/engine.py): all ``K//T`` scoreboards are built in one call and
+the Scoreboard forest is executed level-synchronously across tiles. It must
+be **bit-exact** against ``W.astype(i64) @ X.astype(i64)`` — the paper's
+lossless claim (Sec. 2.1).
 
-  for each k-tile of width T:
-    psum[node] = psum[prefix(node)] + sum(X rows of diff bits)   # PPE
-    out[row]  += sign * 2^shift * psum[node(row)]                # APE + shift
-
-It must be **bit-exact** against ``W.astype(i64) @ X.astype(i64)`` — this is
-the paper's lossless claim (Sec. 2.1), enforced by hypothesis tests.
-
-This is deliberately plain numpy and row-at-a-time clear code: it is the
-reference semantics. The fast paths live in kernels/ (dense doubling LUT)
-and quant/ (int matmul); both are tested against this and against plain
-integer GEMM.
+The original row-at-a-time walker lives on as core/transitive_ref.py; it is
+the oracle that this engine, the Pallas kernel (kernels/transitive_gemm.py)
+and the quant integer-matmul path are all differentially tested against
+(tests/test_engine.py, tests/test_transitive_lossless.py).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bitslice, hasse
-from repro.core.scoreboard import dynamic_scoreboard, ScoreboardInfo
+from repro.core.engine import BatchedTransitiveEngine
+from repro.core.transitive_ref import execute_tile, transitive_gemm_ref
 
-__all__ = ["transitive_gemm", "execute_tile", "transitive_gemm_stats"]
-
-
-def execute_tile(si: ScoreboardInfo, tile_idx: int, x_tile: np.ndarray) -> np.ndarray:
-    """Compute psums (2^T, M) for one tile by walking the prefix forest.
-
-    Args:
-      si: scoreboard for a batch of tiles.
-      tile_idx: which tile.
-      x_tile: (T, M) integer input rows for this k-tile.
-
-    Returns: (2^T, M) int64 psum table (only executed nodes are valid).
-    """
-    t = si.t
-    size = 1 << t
-    m = x_tile.shape[1]
-    psum = np.zeros((size, m), dtype=np.int64)
-    order = hasse.hamming_order(t)
-    exec_counts = si.exec_counts[tile_idx]
-    outlier = si.outlier[tile_idx]
-    prefix = si.prefix[tile_idx]
-    x64 = x_tile.astype(np.int64)
-    for idx in order:
-        if idx == 0 or exec_counts[idx] == 0:
-            continue
-        if outlier[idx]:
-            # dispatched at the end via direct accumulation
-            bits = [b for b in range(t) if (idx >> b) & 1]
-            psum[idx] = x64[bits].sum(0)
-            continue
-        pre = int(prefix[idx])
-        assert pre >= 0, f"executed node {idx} lacks a prefix"
-        diff = idx ^ pre
-        assert diff and hasse.is_prefix(pre, idx), (idx, pre)
-        bits = [b for b in range(t) if (diff >> b) & 1]
-        psum[idx] = psum[pre] + x64[bits].sum(0)
-    return psum
+__all__ = ["transitive_gemm", "transitive_gemm_stats", "execute_tile",
+           "transitive_gemm_ref"]
 
 
 def transitive_gemm(w: np.ndarray, x: np.ndarray, bits: int, t: int,
                     max_distance: int = 4) -> np.ndarray:
-    """Full transitive GEMM: int-S ``w (N, K)`` @ int ``x (K, M)`` → int64.
-
-    Bit-slices w, builds a dynamic scoreboard per k-tile over all S*N
-    TransRows of the tile, executes the forest, then shift-accumulates
-    per-plane psums with 2's-complement signs.
-    """
-    w = np.asarray(w)
-    x = np.asarray(x)
-    n, k = w.shape
-    assert x.shape[0] == k and k % t == 0
-    rows = bitslice.transrow_matrix(w, bits, t)        # (S, N, K//t)
-    signs = bitslice.plane_signs(bits)                 # (S,)
-    out = np.zeros((n, x.shape[1]), dtype=np.int64)
-    for j in range(k // t):
-        tile_rows = rows[:, :, j].reshape(1, -1)       # one tile: S*N rows
-        si = dynamic_scoreboard(tile_rows, t, max_distance)
-        psum = execute_tile(si, 0, x[j * t:(j + 1) * t])
-        vals = rows[:, :, j]                           # (S, N)
-        out += (signs[:, None, None] * psum[vals]).sum(0)
-    return out
+    """Full transitive GEMM: int-S ``w (N, K)`` @ int ``x (K, M)`` → int64."""
+    eng = BatchedTransitiveEngine(bits=bits, t=t, max_distance=max_distance)
+    return eng(np.asarray(w), np.asarray(x))
 
 
 def transitive_gemm_stats(w: np.ndarray, x: np.ndarray, bits: int, t: int):
-    """transitive_gemm + op counts; returns (out, dict of totals)."""
+    """transitive_gemm + op counts; returns (out, dict of totals).
+
+    The op counts come straight off the plan's batched scoreboard — the
+    plan and the executed result share one ScoreboardInfo.
+    """
     from repro.core.patterns import tile_stats
-    w = np.asarray(w)
-    n, k = w.shape
-    rows = bitslice.transrow_matrix(w, bits, t)
-    tiles = rows.transpose(2, 0, 1).reshape(k // t, -1)
-    si = dynamic_scoreboard(tiles, t)
-    st = tile_stats(si)
-    out = transitive_gemm(w, x, bits, t)
+    eng = BatchedTransitiveEngine(bits=bits, t=t)
+    plan = eng.plan(np.asarray(w))
+    st = tile_stats(plan.si)
+    out = eng.run(plan, np.asarray(x))
     totals = {k_: int(getattr(st, k_).sum()) for k_ in
               ("ppe_ops", "ape_ops", "dense_ops", "bit_ops")}
     totals["density"] = max(totals["ppe_ops"], totals["ape_ops"]) / totals["dense_ops"]

@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import jax_compat
+
 __all__ = ["RULES", "spec", "shard", "mesh_axis_size"]
 
 RULES: dict[str, tuple[str, ...]] = {
@@ -38,10 +40,7 @@ RULES: dict[str, tuple[str, ...]] = {
 
 
 def _ambient_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or not m.axis_names:
-        return None
-    return m
+    return jax_compat.get_abstract_mesh()
 
 
 def mesh_axis_size(name: str) -> int:

@@ -1,0 +1,77 @@
+"""Version-compat layer for JAX APIs that moved between 0.4.x and newer.
+
+The repo targets current JAX (explicit ``AxisType`` meshes, ambient
+``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh``, top-level
+``jax.shard_map``), but the pinned container ships an older 0.4.x where
+those live elsewhere or don't exist. Everything that needs one of these
+APIs imports it from here so the rest of the codebase stays on the modern
+spelling:
+
+  * :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` only when the
+    installed JAX knows ``jax.sharding.AxisType``.
+  * :func:`get_abstract_mesh` — the ambient mesh, or ``None`` when no mesh
+    context is active. Falls back to the thread-resources physical mesh
+    that old JAX sets under ``with mesh:``.
+  * :func:`set_mesh` — context manager entering a mesh; ``jax.set_mesh``
+    when present, else the mesh object's own context manager.
+  * :func:`shard_map` — ``jax.shard_map`` when present, else
+    ``jax.experimental.shard_map.shard_map`` (mapping ``check_vma`` to the
+    old ``check_rep`` flag).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "get_abstract_mesh", "set_mesh",
+           "shard_map"]
+
+try:  # jax >= 0.5.x
+    from jax.sharding import AxisType
+except ImportError:  # old jax: meshes have no axis types (all Auto)
+    AxisType = None
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` across versions (axis_types only where supported)."""
+    if AxisType is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when no mesh context is active."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        m = get()
+        if m is None or not m.axis_names:
+            return None
+        return m
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    if m.empty:
+        return None
+    return m
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for jit/sharding constraints."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    if hasattr(mesh, "__enter__"):          # old jax: Mesh is a context mgr
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Top-level shard_map with the modern signature on any version."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as old_sm
+    return old_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

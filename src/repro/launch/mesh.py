@@ -1,9 +1,9 @@
 """Production mesh construction (pure function — importing this module never
-touches jax device state)."""
+touches jax device state). Mesh creation goes through repro.jax_compat so
+the same code imports on old (no AxisType) and new JAX."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import jax_compat
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
@@ -16,11 +16,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return jax_compat.make_mesh((data, model), ("data", "model"))

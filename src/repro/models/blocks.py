@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import jax_compat
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard, mesh_axis_size
 from repro.models.attention import rms_norm
@@ -119,7 +120,7 @@ def apply_moe(params, x, cfg: ModelConfig):
     gates, eids = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = jax_compat.get_abstract_mesh()
     ep = (mesh is not None and "model" in mesh.axis_names
           and cfg.n_experts % mesh.shape["model"] == 0)
 
@@ -153,7 +154,7 @@ def apply_moe(params, x, cfg: ModelConfig):
             return y.reshape(bl, sl, d)
 
         wspec = P(None, "model", None, None)
-        y = jax.shard_map(
+        y = jax_compat.shard_map(
             ep_fn, mesh=mesh,
             in_specs=(xspec, xspec, xspec, wspec, wspec, wspec),
             out_specs=xspec, check_vma=False,

@@ -13,6 +13,10 @@ Three operating modes:
                      result-reuse dataflow in software.
       - ``pallas``:  the Pallas TPU kernel (kernels/transitive_gemm.py);
                      interpret mode on CPU.
+      - ``engine``:  the batched multi-tile scoreboard engine
+                     (core/engine.py) on the host via pure_callback — the
+                     faithful Scoreboard-forest dataflow, bit-exact with
+                     int_dot.
 
 All paths share the same quantization, so they agree bit-exactly on the
 int32 accumulator (property-tested).
@@ -40,7 +44,7 @@ class QuantConfig:
     w_bits: int = 8
     a_bits: int = 8
     group: int = 128          # group size along d_in (exact paths / qat)
-    path: str = "int_dot"     # int_dot | lut | pallas
+    path: str = "int_dot"     # int_dot | lut | pallas | engine
     transrow_t: int = 8       # TransRow width for transitive paths
 
     def with_(self, **kw) -> "QuantConfig":
@@ -73,6 +77,45 @@ def _int_matmul(qx: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
         preferred_element_type=jnp.int32)
 
 
+def _engine_matmul(qx: jnp.ndarray, qw: jnp.ndarray, w_bits: int,
+                   t: int) -> jnp.ndarray:
+    """Batched transitive engine (host numpy) as a jit-safe integer GEMM."""
+    import numpy as np
+    from repro.core.engine import BatchedTransitiveEngine
+
+    out = jax.ShapeDtypeStruct(qx.shape[:-1] + (qw.shape[0],), jnp.int32)
+
+    def host(qx_np, qw_np):
+        eng = BatchedTransitiveEngine(bits=w_bits, t=t)
+        flat = np.asarray(qx_np, np.int64).reshape(-1, qx_np.shape[-1])
+        y = eng(np.asarray(qw_np, np.int64), flat.T).T
+        return y.reshape(out.shape).astype(np.int32)
+
+    return jax.pure_callback(host, out, qx, qw)
+
+
+def _engine_matmul_grouped(xg: jnp.ndarray, wg: jnp.ndarray, w_bits: int,
+                           t: int) -> jnp.ndarray:
+    """Grouped engine GEMM: xg (..., G, g) x wg (N, G, g) -> (..., G, N).
+
+    One host round trip for all groups (vs one callback per group)."""
+    import numpy as np
+    from repro.core.engine import BatchedTransitiveEngine
+
+    n, n_groups, g = wg.shape
+    out = jax.ShapeDtypeStruct(xg.shape[:-1] + (n,), jnp.int32)
+
+    def host(xg_np, wg_np):
+        eng = BatchedTransitiveEngine(bits=w_bits, t=t)
+        flat = np.asarray(xg_np, np.int64).reshape(-1, n_groups, g)
+        parts = np.stack([
+            eng(np.asarray(wg_np[:, gi], np.int64), flat[:, gi].T).T
+            for gi in range(n_groups)], axis=1)          # (M, G, N)
+        return parts.reshape(out.shape).astype(np.int32)
+
+    return jax.pure_callback(host, out, xg, wg)
+
+
 def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     qw, sg = params["qw"], params["sg"]
     d_out, d_in = qw.shape
@@ -87,6 +130,8 @@ def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
             from repro.kernels import ops
             y32 = ops.transitive_gemm(qx, qw, w_bits=cfg.w_bits,
                                       t=cfg.transrow_t)
+        elif cfg.path == "engine":
+            y32 = _engine_matmul(qx, qw, cfg.w_bits, cfg.transrow_t)
         else:
             y32 = _int_matmul(qx, qw)
         y = y32.astype(jnp.float32) * sx * sg[:, 0]
@@ -103,6 +148,8 @@ def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
             from repro.kernels import ops
             part = ops.transitive_gemm_grouped(xg, wg, w_bits=cfg.w_bits,
                                                t=cfg.transrow_t)
+        elif cfg.path == "engine":
+            part = _engine_matmul_grouped(xg, wg, cfg.w_bits, cfg.transrow_t)
         else:
             part = jnp.einsum("...gi,ngi->...gn", xg, wg,
                               preferred_element_type=jnp.int32)

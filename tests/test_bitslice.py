@@ -1,6 +1,6 @@
 """Bit-slicing properties (paper Sec. 2.1-2.2): exact roundtrips."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, strategies as st
 
 from repro.core import bitslice
 
