@@ -8,11 +8,15 @@ flops/bytes of the W4A8 MXU path vs a bf16 matmul at equal shape (the
 TPU-side memory win).
 
 ``--smoke`` shrinks every shape for CI: a few seconds total, still
-exercising every code path end-to-end.
+exercising every code path end-to-end. ``--serve-bench`` switches to the
+cached-vs-uncached serving comparison (plan built per call vs plan from
+core/plancache.py) and writes ``BENCH_engine.json``; the kernel microbench
+is then skipped (CI runs the two as separate steps).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -100,8 +104,80 @@ def run(smoke: bool = False):
          "smoke" if smoke else "ok")
 
 
+def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json"):
+    """Cached vs uncached serving: L layer weights x D decode steps.
+
+    *uncached* is the pre-plan-cache serving behaviour (every forward call
+    re-plans the weight inside the callback); *cached* is the shipped path:
+    plans built once offline via PlanCache, decode run-only. Emits the
+    split to stdout and writes ``out`` for the CI perf trajectory."""
+    from repro.core.plancache import PlanCache
+
+    layers, steps = (4, 8) if smoke else (8, 32)
+    n = k = 64 if smoke else 256
+    m = 4                                    # decode-like tall-skinny GEMM
+    rng = np.random.default_rng(2)
+    ws = [synth_weights(n, k, 8, seed=s) for s in range(layers)]
+    xs = [rng.integers(-128, 128, (k, m)) for _ in range(steps)]
+    eng = BatchedTransitiveEngine(bits=8, t=8)
+
+    t0 = time.perf_counter()
+    for x in xs:
+        for w in ws:
+            eng(w, x)                        # plan + run, every call
+    us_uncached = (time.perf_counter() - t0) * 1e6
+
+    cache = PlanCache(capacity=2 * layers)
+    t0 = time.perf_counter()
+    for w in ws:                             # offline precompile
+        cache.get_or_build(w, 8, 8)
+    us_plan = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for x in xs:
+        for w in ws:                         # hot path: run-only
+            cache.run(w, x, 8, 8)
+    us_cached = (time.perf_counter() - t0) * 1e6
+
+    stats = cache.stats()
+    # fail loudly even under python -O: a re-plan in the cached loop would
+    # make the emitted numbers meaningless
+    if stats["misses"] != layers or stats["hits"] != layers * steps:
+        raise RuntimeError(f"plan cache re-planned during the cached loop: "
+                           f"{stats} (expected misses={layers}, "
+                           f"hits={layers * steps})")
+    calls = layers * steps
+    result = {
+        "shape": {"layers": layers, "decode_steps": steps,
+                  "n": n, "k": k, "m": m, "w_bits": 8, "t": 8},
+        "uncached_us": us_uncached,
+        "plan_build_us": us_plan,
+        "cached_decode_us": us_cached,
+        "per_call_uncached_us": us_uncached / calls,
+        "per_call_cached_us": us_cached / calls,
+        "speedup_cached": us_uncached / us_cached,
+        "cache": stats,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    emit("serve_plan_cache", us_cached,
+         f"{layers} layers x {steps} steps {n}x{k}x{m}: "
+         f"uncached={us_uncached:.0f}us plan_once={us_plan:.0f}us "
+         f"cached_decode={us_cached:.0f}us "
+         f"speedup=x{result['speedup_cached']:.1f} "
+         f"(misses={stats['misses']} hits={stats['hits']}) -> {out}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--serve-bench", action="store_true",
+                    help="run ONLY the cached-vs-uncached serving benchmark "
+                    "(the kernel microbench is its own invocation)")
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="output path for the serving-bench JSON")
+    args = ap.parse_args()
+    if args.serve_bench:
+        serve_bench(smoke=args.smoke, out=args.json)
+    else:
+        run(smoke=args.smoke)

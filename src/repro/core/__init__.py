@@ -5,8 +5,11 @@ Modules:
   hasse      — subset partial order tables (prefixes/suffixes/levels)
   scoreboard — faithful Alg.1/Alg.2 + balanced forest (static & dynamic SI)
   transitive — lossless transitive GEMM execution (bit-exact oracle)
+  engine     — batched multi-tile plan/run engine (offline/online split)
+  plancache  — LRU ExecutionPlan cache + precompile (serving amortisation)
   patterns   — ZR/TR/FR/PR classification, density & cycle statistics
   costmodel  — Transitive Array cycle/energy model (Tbl. 1/2 config)
   baselines  — BitFusion / ANT / Olive / Tender / BitVert analytic models
 """
-from repro.core import bitslice, hasse, patterns, scoreboard, transitive  # noqa: F401
+from repro.core import (bitslice, engine, hasse, patterns,  # noqa: F401
+                        plancache, scoreboard, transitive)

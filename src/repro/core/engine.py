@@ -53,7 +53,7 @@ class ExecutionPlan:
     t: int                     # TransRow width
     bits: int                  # weight bit width S
     n: int                     # output rows
-    k: int                     # reduction length
+    k: int                     # reduction length (all groups concatenated)
     rows: np.ndarray           # (S, N, J) int64 TransRow values (APE gather)
     si: ScoreboardInfo         # batched scoreboard over all J tiles
     steps: tuple[LevelStep, ...]   # level-synchronous schedule, level 1..T
@@ -61,6 +61,7 @@ class ExecutionPlan:
     direct_node: np.ndarray    # (D,) int64
     direct_bits: np.ndarray    # (D, T) int64 {0,1} — their bit patterns
     signs: np.ndarray          # (S,) int64 2's-complement plane weights
+    groups: int = 1            # G quantization groups along K (1 = ungrouped)
 
     @property
     def n_tiles(self) -> int:
@@ -81,12 +82,24 @@ class BatchedTransitiveEngine:
         self.max_distance = max_distance
 
     # -- offline: weights -> reusable schedule ---------------------------
-    def plan(self, w: np.ndarray) -> ExecutionPlan:
+    def plan(self, w: np.ndarray, groups: int = 1) -> ExecutionPlan:
+        """Build the weight-only schedule.
+
+        With ``groups=G`` the columns of ``w`` are G concatenated
+        quantization groups of ``K//G`` each; the scoreboard/forest build is
+        identical (it is already batched over k-tiles), only :meth:`run`'s
+        final reduction changes to keep one partial sum per group. This is
+        how all G groups of a group-quantized layer plan as a *single*
+        batched tile axis instead of G separate engine invocations.
+        """
         w = np.asarray(w)
         n, k = w.shape
         t = self.t
         if k % t:
             raise ValueError(f"K={k} not divisible by T={t}")
+        if groups < 1 or k % groups or (k // groups) % t:
+            raise ValueError(
+                f"K={k} not divisible into {groups} T={t}-aligned groups")
         rows = bitslice.transrow_matrix(w, self.bits, t).astype(np.int64)
         n_tiles = k // t
         tile_rows = rows.transpose(2, 0, 1).reshape(n_tiles, -1)  # (J, S*N)
@@ -127,10 +140,16 @@ class BatchedTransitiveEngine:
                              direct_tile=d_tile.astype(np.int64),
                              direct_node=d_node.astype(np.int64),
                              direct_bits=d_bits,
-                             signs=bitslice.plane_signs(self.bits))
+                             signs=bitslice.plane_signs(self.bits),
+                             groups=groups)
 
     # -- online: activations through the planned forest ------------------
     def run(self, plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
+        """Execute the planned forest against activations ``x`` (K, M).
+
+        Returns (N, M) for an ungrouped plan; (N, G, M) per-group partial
+        sums for a grouped one (epilogue rescaling happens in the caller).
+        """
         x = np.asarray(x)
         if x.ndim != 2 or x.shape[0] != plan.k:
             raise ValueError(f"x must be (K={plan.k}, M), got {x.shape}")
@@ -148,14 +167,16 @@ class BatchedTransitiveEngine:
                                           + xt[step.tile, step.bit])
 
         # APE shift-accumulate: gather every TransRow's psum and reduce
-        # over tiles, one vectorised pass per bit plane.
+        # over each group's tiles, one vectorised pass per bit plane.
         flat = psum.reshape(n_tiles * size, m)
         gather_idx = np.arange(n_tiles, dtype=np.int64)[None, None, :] * size \
             + plan.rows                                     # (S, N, J)
-        out = np.zeros((plan.n, m), dtype=np.int64)
+        g, jg = plan.groups, n_tiles // plan.groups
+        out = np.zeros((plan.n, g, m), dtype=np.int64)
         for s in range(plan.bits):
-            out += plan.signs[s] * flat[gather_idx[s]].sum(axis=1)
-        return out
+            gathered = flat[gather_idx[s]].reshape(plan.n, g, jg, m)
+            out += plan.signs[s] * gathered.sum(axis=2)
+        return out[:, 0] if g == 1 else out
 
     def __call__(self, w: np.ndarray, x: np.ndarray) -> np.ndarray:
         return self.run(self.plan(w), x)

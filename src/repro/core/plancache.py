@@ -1,0 +1,232 @@
+"""Process-level ExecutionPlan cache for the serving path.
+
+The paper's offline/online split (TransRow packing + Scoreboard build are
+weight-only; only forest execution depends on activations) only pays off if
+the offline half runs **once per weight**, not once per forward call. This
+module is that amortisation, as a first-class subsystem:
+
+  * :class:`PlanCache` — an LRU-bounded map from
+    ``(weight fingerprint, w_bits, T, groups)`` to a ready
+    :class:`~repro.core.engine.ExecutionPlan`, with hit / miss / eviction /
+    invalidation counters so serving can *prove* each plan was built exactly
+    once (misses == distinct quantized weights, hits == remaining calls).
+  * a process-level default cache that the jit-side host callbacks in
+    ``quant/qlinear.py`` consult on every engine forward — the hot path only
+    ever executes ``run(plan, x)``.
+  * :func:`precompile` — an offline pass that walks a model's params pytree
+    (including vmap-stacked leading axes from scanned super-blocks) and
+    builds every PTQ layer's plan up front, so the first decoded token pays
+    zero plan-build cost.
+
+Weights are fingerprinted by content (blake2b over shape/dtype/bytes), so a
+weight *update* naturally misses — and :meth:`PlanCache.invalidate` drops
+the stale entry explicitly so updated-weight serving does not leak plans
+until LRU pressure finds them. Content keys make correctness unconditional
+(no way to serve a stale plan) at the cost of hashing the int8 weight bytes
+per lookup; that is noise next to this host-numpy engine's ``run``, but a
+hardware lowering should switch the hot path to per-layer version tags and
+keep content hashing for :meth:`invalidate` (see ROADMAP).
+
+Plain numpy + stdlib — this is host-side state next to the host-side
+engine; nothing here traces under jit.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Iterator
+
+import numpy as np
+
+from repro.core.engine import BatchedTransitiveEngine, ExecutionPlan
+
+__all__ = ["PlanCache", "weight_fingerprint", "default_cache",
+           "set_default_cache", "precompile"]
+
+PlanKey = tuple[str, int, int, int]
+
+
+def weight_fingerprint(qw: np.ndarray) -> str:
+    """Content hash of a quantized weight (shape + dtype + bytes)."""
+    a = np.ascontiguousarray(np.asarray(qw))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((a.shape, a.dtype.str)).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """LRU cache of weight-only execution plans.
+
+    Keyed by ``(weight fingerprint, w_bits, T, groups)``: the fingerprint
+    covers the integer weight content, the remaining fields cover everything
+    else :meth:`BatchedTransitiveEngine.plan` depends on. All operations are
+    lock-protected — host callbacks may fire from XLA worker threads.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._plans: OrderedDict[PlanKey, ExecutionPlan] = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    # -- lookup / build ---------------------------------------------------
+    def get_or_build(self, qw: np.ndarray, w_bits: int, t: int,
+                     groups: int = 1) -> ExecutionPlan:
+        """Return the cached plan for ``qw`` (N, K), building it on miss.
+
+        ``qw`` is the full 2-D integer weight with all quantization groups
+        concatenated along K; grouped layers pass ``groups=G`` and get one
+        batched plan covering every group.
+        """
+        qw = np.asarray(qw)
+        if qw.ndim != 2:
+            raise ValueError(f"qw must be 2-D (N, K), got {qw.shape}")
+        key = (weight_fingerprint(qw), int(w_bits), int(t), int(groups))
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan
+            self.misses += 1
+            plan = BatchedTransitiveEngine(bits=w_bits, t=t).plan(
+                qw.astype(np.int64, copy=False), groups=groups)
+            self._plans[key] = plan
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+            return plan
+
+    def run(self, qw: np.ndarray, x: np.ndarray, w_bits: int, t: int,
+            groups: int = 1) -> np.ndarray:
+        """Cached GEMM: plan on first sight of ``qw``, run-only after."""
+        plan = self.get_or_build(qw, w_bits, t, groups)
+        return BatchedTransitiveEngine(bits=plan.bits, t=plan.t).run(plan, x)
+
+    # -- invalidation -----------------------------------------------------
+    def invalidate(self, qw: np.ndarray) -> int:
+        """Drop every cached plan for this weight content (any bits/T/groups).
+
+        Call on weight update; returns the number of entries removed."""
+        fp = weight_fingerprint(qw)
+        with self._lock:
+            stale = [k for k in self._plans if k[0] == fp]
+            for k in stale:
+                del self._plans[k]
+            self.invalidations += len(stale)
+            return len(stale)
+
+    def clear(self) -> None:
+        """Drop all entries (counts them as invalidations)."""
+        with self._lock:
+            self.invalidations += len(self._plans)
+            self._plans.clear()
+
+    def reserve(self, n_plans: int) -> None:
+        """Grow capacity to hold at least ``n_plans`` entries (never shrinks).
+
+        Precompile calls this with the model's total plan count so a large
+        model cannot LRU-thrash its own warmup."""
+        with self._lock:
+            self.capacity = max(self.capacity, int(n_plans))
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.hits = self.misses = 0
+            self.evictions = self.invalidations = 0
+
+    # -- introspection ----------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "invalidations": self.invalidations,
+                    "size": len(self._plans), "capacity": self.capacity}
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (f"PlanCache(size={s['size']}/{s['capacity']} "
+                f"hits={s['hits']} misses={s['misses']} "
+                f"evictions={s['evictions']} "
+                f"invalidations={s['invalidations']})")
+
+
+# -- process-level default cache (the serving path's handle) ---------------
+
+_default_cache = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    """The process-level cache used by the qlinear engine callbacks."""
+    return _default_cache
+
+
+def set_default_cache(cache: PlanCache) -> PlanCache:
+    """Swap the process-level cache (tests / per-session isolation);
+    returns the previous one."""
+    global _default_cache
+    prev = _default_cache
+    _default_cache = cache
+    return prev
+
+
+# -- offline precompile pass ------------------------------------------------
+
+def _iter_ptq_layers(tree: Any) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield (qw, sg) leaf pairs from a params pytree of nested dicts."""
+    if isinstance(tree, dict):
+        if "qw" in tree and "sg" in tree:
+            yield np.asarray(tree["qw"]), np.asarray(tree["sg"])
+            return
+        for v in tree.values():
+            yield from _iter_ptq_layers(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _iter_ptq_layers(v)
+
+
+def precompile(params: Any, cfg: Any,
+               cache: PlanCache | None = None) -> dict[str, int]:
+    """Build every PTQ layer's ExecutionPlan once, ahead of serving.
+
+    Walks ``params`` for ``{"qw", "sg"}`` layer dicts — including weights
+    stacked along leading axes by the scan-over-super-blocks model init —
+    and warms ``cache`` (default: the process cache) with one batched plan
+    per distinct (weight, group) pair. ``cfg`` needs ``w_bits`` and
+    ``transrow_t`` attributes (a ``QuantConfig`` works).
+
+    Returns ``{"layers": stacked leaf count, "plans": plan-build calls,
+    "built": cold builds (== new cache misses)}``.
+    """
+    cache = default_cache() if cache is None else cache
+    misses0 = cache.stats()["misses"]
+    leaves = list(_iter_ptq_layers(params))
+    # Size the cache to the model BEFORE building: otherwise a model with
+    # more distinct weights than capacity evicts its own warmup and decode
+    # silently re-plans every call.
+    total = sum(int(np.prod(qw.shape[:-2], dtype=np.int64))
+                for qw, _ in leaves)
+    cache.reserve(total)
+    layers = plans = 0
+    for qw, sg in leaves:
+        layers += 1
+        # sg's trailing axis is the per-group scale count: 1 = per-channel.
+        groups = int(sg.shape[-1]) if sg.ndim else 1
+        lead = qw.shape[:-2]
+        for idx in np.ndindex(*lead):
+            cache.get_or_build(qw[idx], cfg.w_bits, cfg.transrow_t,
+                               groups=groups)
+            plans += 1
+    return {"layers": layers, "plans": plans,
+            "built": cache.stats()["misses"] - misses0}

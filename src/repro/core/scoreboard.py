@@ -65,11 +65,21 @@ class ScoreboardInfo:
         return e
 
 
+# De Bruijn multiply-shift lowest-set-bit: exact in integer arithmetic, so
+# prefix selection cannot drift with float log2 rounding at larger T.
+_DEBRUIJN32 = np.uint32(0x077CB531)
+_DEBRUIJN_IDX = np.empty(32, dtype=np.int64)
+for _i in range(32):
+    _DEBRUIJN_IDX[(((1 << _i) * 0x077CB531) & 0xFFFFFFFF) >> 27] = _i
+del _i
+
+
 def _first_set_bit(bm: np.ndarray) -> np.ndarray:
     """Lowest set bit index of each nonzero entry ("first available" prefix)."""
-    lsb = (bm & (-bm.astype(np.int64))).astype(np.float64)
-    with np.errstate(divide="ignore"):
-        return np.where(bm > 0, np.log2(np.maximum(lsb, 1)).astype(np.int64), -1)
+    b32 = bm.astype(np.uint32)
+    lsb = b32 & (~b32 + np.uint32(1))       # isolate lowest set bit
+    idx = _DEBRUIJN_IDX[(lsb * _DEBRUIJN32) >> np.uint32(27)]
+    return np.where(b32 != 0, idx, -1)
 
 
 def _node_counts(rows: np.ndarray, t: int) -> np.ndarray:

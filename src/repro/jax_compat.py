@@ -17,15 +17,19 @@ spelling:
   * :func:`shard_map` — ``jax.shard_map`` when present, else
     ``jax.experimental.shard_map.shard_map`` (mapping ``check_vma`` to the
     old ``check_rep`` flag).
+  * :func:`pure_callback` — forwards ``vmap_method`` only where the
+    installed JAX (>= 0.4.34) accepts it; older versions fall back to the
+    legacy batching behaviour rather than raising ``TypeError``.
 """
 from __future__ import annotations
 
 import contextlib
+import inspect
 
 import jax
 
 __all__ = ["AxisType", "make_mesh", "get_abstract_mesh", "set_mesh",
-           "shard_map"]
+           "shard_map", "pure_callback"]
 
 try:  # jax >= 0.5.x
     from jax.sharding import AxisType
@@ -64,6 +68,18 @@ def set_mesh(mesh):
     if hasattr(mesh, "__enter__"):          # old jax: Mesh is a context mgr
         return mesh
     return contextlib.nullcontext(mesh)
+
+
+_PURE_CALLBACK_HAS_VMAP_METHOD = (
+    "vmap_method" in inspect.signature(jax.pure_callback).parameters)
+
+
+def pure_callback(callback, result_shape_dtypes, *args,
+                  vmap_method: str | None = None, **kwargs):
+    """``jax.pure_callback`` forwarding ``vmap_method`` where supported."""
+    if vmap_method is not None and _PURE_CALLBACK_HAS_VMAP_METHOD:
+        kwargs["vmap_method"] = vmap_method
+    return jax.pure_callback(callback, result_shape_dtypes, *args, **kwargs)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):

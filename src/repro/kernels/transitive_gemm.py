@@ -92,8 +92,13 @@ def transitive_gemm_pallas(qx: jnp.ndarray, qw: jnp.ndarray, *,
     """
     m, k = qx.shape
     n = qw.shape[0]
-    assert qw.shape[1] == k and k % bk == 0 and bk % t == 0
-    assert m % bm == 0 and n % bn == 0
+    if qw.shape[1] != k:
+        raise ValueError(f"reduction mismatch: qx {qx.shape} vs qw {qw.shape}")
+    if k % bk or bk % t:
+        raise ValueError(f"K={k} must tile by bk={bk} and bk by T={t}")
+    if m % bm or n % bn:
+        raise ValueError(f"M={m}, N={n} must tile by bm={bm}, bn={bn} "
+                         "(kernels/ops.py pads non-divisible shapes)")
     # Pre-pack TransRows (offline in the paper; cheap jnp here).
     planes = bitslice.bit_planes_jnp(qw.astype(jnp.int32), w_bits)
     rows = bitslice.pack_transrows_jnp(planes, t)          # (S, N, J)

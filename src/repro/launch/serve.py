@@ -3,7 +3,13 @@ Transitive-Array path (W4A8 TransitiveLinear + dynamic int8 attention +
 KV8 cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced \
-      --batch 4 --prompt-len 16 --gen 16 [--w-bits 4]
+      --batch 4 --prompt-len 16 --gen 16 [--w-bits 4] [--path engine]
+
+``--path engine`` serves through the plan-cached Scoreboard forest: every
+layer's ExecutionPlan is built exactly once (offline precompile over the
+params pytree), decode is run-only, and the report splits plan-build time
+from decode time and prints the cache counters (misses == distinct
+quantized weights, hits == remaining engine forward calls).
 """
 from __future__ import annotations
 
@@ -27,15 +33,33 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--w-bits", type=int, default=4, choices=(4, 8))
+    ap.add_argument("--path", default="int_dot",
+                    choices=("int_dot", "lut", "pallas", "engine"),
+                    help="integer-GEMM execution path for PTQ linears")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline comparison)")
+    ap.add_argument("--no-precompile", action="store_true",
+                    help="skip the offline plan warmup (engine path only; "
+                    "plans then build lazily on first forward per weight)")
     args = ap.parse_args()
 
     base = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    cfg = base if args.fp else serve_config(base, w_bits=args.w_bits)
+    cfg = base if args.fp else serve_config(base, w_bits=args.w_bits,
+                                            path=args.path)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    engine_path = not args.fp and args.path == "engine"
+    plan_stats, t_plan = {}, 0.0
+    if engine_path:
+        from repro.core import plancache
+        cache = plancache.default_cache()
+        cache.reset_stats()
+        if not args.no_precompile:
+            t0 = time.time()
+            plan_stats = model.precompile_plans(params)
+            t_plan = time.time() - t0
 
     key = jax.random.PRNGKey(1)
     batch = {"tokens": jax.random.randint(
@@ -50,9 +74,20 @@ def main():
     toks = greedy_generate(model, params, batch, max_len=max_len,
                            n_steps=args.gen)
     dt = time.time() - t0
-    mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8"
+    mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{args.path}"
     print(f"[{cfg.name} | {mode}] generated {args.batch}x{args.gen} tokens "
           f"in {dt:.2f}s")
+    if engine_path:
+        s = cache.stats()
+        print(f"[plan cache] offline plan-build {t_plan:.2f}s "
+              f"({plan_stats.get('plans', 0)} plans over "
+              f"{plan_stats.get('layers', 0)} stacked layer weights) | "
+              f"decode {dt:.2f}s run-only")
+        print(f"[plan cache] misses={s['misses']} hits={s['hits']} "
+              f"evictions={s['evictions']} size={s['size']}")
+        if s["misses"] != plan_stats.get("built", s["misses"]):
+            print("[plan cache] WARNING: plans were built during decode — "
+                  "re-planning leaked back into the hot path")
     print(np.asarray(toks))
 
 

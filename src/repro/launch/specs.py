@@ -21,11 +21,17 @@ __all__ = ["serve_config", "train_cell_specs", "serve_cell_specs",
            "named", "cache_specs"]
 
 
-def serve_config(cfg: ModelConfig, w_bits: int = 4) -> ModelConfig:
+def serve_config(cfg: ModelConfig, w_bits: int = 4,
+                 path: str = "int_dot") -> ModelConfig:
     """Serving variant: the paper's technique on — PTQ W4A8 linears
-    (per-channel epilogue scales at scale) + dynamic int8 attention."""
+    (per-channel epilogue scales at scale) + dynamic int8 attention.
+
+    ``path`` selects the integer-GEMM execution (int_dot | lut | pallas |
+    engine); all are bit-exact on the int32 accumulator. ``engine`` serves
+    through the plan-cached Scoreboard forest (core/plancache.py)."""
     return cfg.replace(
-        quant=QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=0),
+        quant=QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=0,
+                          path=path),
         quant_attention=not cfg.is_encdec,
         kv_cache_bits=8 if not cfg.is_encdec else 16,
         remat="none")

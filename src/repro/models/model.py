@@ -137,6 +137,23 @@ class Model:
             params["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
         return params
 
+    # ---- serve-path plan warmup -------------------------------------------
+    def precompile_plans(self, params: Params) -> dict:
+        """Build every PTQ linear's engine ExecutionPlan ahead of serving.
+
+        The offline half of the paper's offline/online split: walks the
+        params pytree (including scan-stacked block weights) and warms the
+        **process-level** plan cache — the only cache the qlinear hot-path
+        callbacks consult (swap it via ``plancache.set_default_cache``) —
+        so decode only ever pays ``run``. No-op (empty stats) unless this
+        model serves through ``path="engine"``.
+        """
+        q = self.cfg.quant
+        if q.mode != "ptq" or q.path != "engine":
+            return {"layers": 0, "plans": 0, "built": 0}
+        from repro.core import plancache
+        return plancache.precompile(params, q)
+
     # ---- shared ------------------------------------------------------------
     def _embed_tokens(self, params, tokens):
         x = jnp.take(params["embed"], tokens, axis=0).astype(self.cfg.dtype)

@@ -1,0 +1,248 @@
+"""Plan-cache subsystem tests (core/plancache.py + the rewired serving path).
+
+Covers the ISSUE-2 acceptance surface: hit/miss/eviction/invalidation
+counters, invalidation when ``qw`` changes, bit-exactness of cached vs
+freshly-planned outputs (incl. the single-batched-plan grouped path), the
+offline ``precompile`` pytree walk, and ``path="engine"`` under ``jit`` +
+``vmap``.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import BatchedTransitiveEngine
+from repro.core.plancache import (PlanCache, default_cache, precompile,
+                                  set_default_cache, weight_fingerprint)
+
+
+@pytest.fixture
+def cache():
+    """Fresh process-default cache per test; restores the previous one."""
+    c = PlanCache(capacity=64)
+    prev = set_default_cache(c)
+    yield c
+    set_default_cache(prev)
+
+
+def _w(rng, n=9, k=32, bits=4):
+    lo = 1 << (bits - 1)
+    return rng.integers(-lo, lo, size=(n, k))
+
+
+# -- counters ---------------------------------------------------------------
+
+def test_hit_miss_counters(rng):
+    c = PlanCache()
+    w = _w(rng)
+    p1 = c.get_or_build(w, 4, 8)
+    p2 = c.get_or_build(w, 4, 8)
+    assert p1 is p2
+    assert c.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                         "invalidations": 0, "size": 1, "capacity": 256}
+    # a different (bits, t) is a different plan for the same bytes
+    c.get_or_build(w, 4, 4)
+    assert c.stats()["misses"] == 2 and len(c) == 2
+
+
+def test_lru_eviction_order(rng):
+    c = PlanCache(capacity=2)
+    w1, w2, w3 = (_w(rng) for _ in range(3))
+    c.get_or_build(w1, 4, 8)
+    c.get_or_build(w2, 4, 8)
+    c.get_or_build(w1, 4, 8)          # touch w1 -> w2 is now LRU
+    c.get_or_build(w3, 4, 8)          # evicts w2
+    assert c.stats()["evictions"] == 1
+    c.get_or_build(w1, 4, 8)          # still resident
+    assert c.stats()["hits"] == 2
+    c.get_or_build(w2, 4, 8)          # gone -> rebuild
+    assert c.stats()["misses"] == 4
+
+
+def test_invalidation_on_weight_update(rng):
+    c = PlanCache()
+    w = _w(rng)
+    c.get_or_build(w, 4, 8)
+    c.get_or_build(w, 4, 4)
+    # content change -> different fingerprint -> natural miss, no stale hit
+    w2 = w.copy()
+    w2[0, 0] ^= 1
+    c.get_or_build(w2, 4, 8)
+    assert c.stats()["misses"] == 3 and c.stats()["hits"] == 0
+    # explicit invalidation drops every (bits, t) entry of the old weight
+    assert c.invalidate(w) == 2
+    assert c.stats()["invalidations"] == 2 and len(c) == 1
+    c.get_or_build(w, 4, 8)
+    assert c.stats()["misses"] == 4
+
+
+def test_fingerprint_covers_shape_and_dtype(rng):
+    w = _w(rng, n=4, k=16).astype(np.int8)
+    assert weight_fingerprint(w) == weight_fingerprint(w.copy())
+    assert weight_fingerprint(w) != weight_fingerprint(w.astype(np.int64))
+    assert weight_fingerprint(w) != weight_fingerprint(w.reshape(8, 8))
+
+
+def test_clear_and_reset(rng):
+    c = PlanCache()
+    c.get_or_build(_w(rng), 4, 8)
+    c.clear()
+    assert len(c) == 0 and c.stats()["invalidations"] == 1
+    c.reset_stats()
+    assert c.stats()["misses"] == 0
+
+
+# -- bit-exactness ----------------------------------------------------------
+
+def test_cached_run_bit_exact(rng):
+    c = PlanCache()
+    w = _w(rng, n=11, k=48, bits=8)
+    want = None
+    for seed in range(3):
+        x = np.random.default_rng(seed).integers(-128, 128, (48, 7))
+        got = c.run(w, x, 8, 8)
+        want = w.astype(np.int64) @ x.astype(np.int64)
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got, BatchedTransitiveEngine(8, 8)(w, x))
+    assert c.stats()["misses"] == 1 and c.stats()["hits"] == 2
+
+
+def test_grouped_plan_single_batched_build(rng):
+    """All G groups plan as ONE batched tile axis and stay bit-exact."""
+    n, G, g, m = 6, 4, 16, 5
+    w = _w(rng, n=n, k=G * g, bits=4)
+    x = rng.integers(-128, 128, (G * g, m))
+    c = PlanCache()
+    part = c.run(w, x, 4, 8, groups=G)                  # (N, G, M)
+    want = np.einsum("ngi,gim->ngm",
+                     w.reshape(n, G, g).astype(np.int64),
+                     x.reshape(G, g, m).astype(np.int64))
+    np.testing.assert_array_equal(part, want)
+    assert c.stats() == {"hits": 0, "misses": 1, "evictions": 0,
+                         "invalidations": 0, "size": 1, "capacity": 256}
+
+
+# -- the serving path (qlinear callbacks) -----------------------------------
+
+@pytest.mark.parametrize("group", [0, 64])
+def test_engine_path_uses_cache(cache, group):
+    """linear_apply path="engine" plans once per weight, then run-only —
+    including the grouped case (one batched plan, not one per group)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group,
+                      path="engine")
+    p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
+    y0 = linear_apply(p, x, cfg)
+    for _ in range(2):
+        linear_apply(p, x, cfg)
+    s = cache.stats()
+    assert s["misses"] == 1 and s["hits"] == 2
+    y_int = linear_apply(p, x, cfg.with_(path="int_dot"))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y_int))
+
+
+@pytest.mark.parametrize("group", [0, 64])
+def test_engine_path_under_jit_vmap(cache, group):
+    """path="engine" composes with jit + vmap and matches int_dot there."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group)
+    p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 128), jnp.float32)
+
+    def f(path):
+        return jax.jit(jax.vmap(
+            lambda xi: linear_apply(p, xi, cfg.with_(path=path))))(x)
+    np.testing.assert_array_equal(np.asarray(f("engine")),
+                                  np.asarray(f("int_dot")))
+    assert cache.stats()["misses"] == 1
+
+
+# -- offline precompile -----------------------------------------------------
+
+def test_precompile_walks_nested_and_stacked_params(cache):
+    """precompile finds {qw, sg} leaves under nesting and vmap-stacked
+    leading axes, builds each plan once, and makes serving all-hits."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64, path="engine")
+    flat = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
+    stacked = jax.vmap(lambda k: linear_init(k, 128, 16, cfg))(
+        jax.random.split(jax.random.PRNGKey(1), 3))
+    params = {"blocks": {"b0": {"up": stacked}}, "head": flat,
+              "norm": jnp.ones((4,))}
+    stats = precompile(params, cfg, cache=cache)
+    assert stats == {"layers": 2, "plans": 4, "built": 4}
+    assert cache.stats()["misses"] == 4 and len(cache) == 4
+    # every subsequent forward is a pure hit — incl. the stacked weights
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 128), jnp.float32)
+    linear_apply(flat, x, cfg)
+    for r in range(3):
+        p_r = jax.tree.map(lambda a: a[r], stacked)
+        linear_apply(p_r, x, cfg)
+    s = cache.stats()
+    assert s["misses"] == 4 and s["hits"] == 4
+
+
+def test_model_precompile_plans_end_to_end(cache):
+    """Model.precompile_plans warms every PTQ layer; prefill+decode then
+    run plan-free (misses == distinct quantized weights)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+
+    cfg = serve_config(get_reduced("smollm-135m"), w_bits=4, path="engine")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stats = model.precompile_plans(params)
+    assert stats["built"] == stats["plans"] > 0
+    misses = cache.stats()["misses"]
+    assert misses == stats["built"]
+
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                                          cfg.vocab, jnp.int32)}
+    logits, caches = jax.jit(lambda p, b: model.prefill(p, b, 8))(params,
+                                                                 batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits, _ = jax.jit(model.decode_step)(params, caches, tok, jnp.int32(4))
+    jax.block_until_ready(logits)
+    s = cache.stats()
+    assert s["misses"] == misses, "decode re-planned a weight"
+    assert s["hits"] > 0
+
+
+def test_default_cache_swap_restores():
+    c = PlanCache(capacity=1)
+    prev = set_default_cache(c)
+    try:
+        assert default_cache() is c
+    finally:
+        set_default_cache(prev)
+    assert default_cache() is prev
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+    with pytest.raises(ValueError):
+        PlanCache().get_or_build(np.zeros((2, 2, 8), np.int8), 4, 8)
+
+
+def test_precompile_reserves_capacity(cache):
+    """A model with more weights than capacity must not thrash its own
+    warmup: precompile grows the cache before building."""
+    import jax
+    from repro.quant import QuantConfig, linear_init
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0, path="engine")
+    small = PlanCache(capacity=2)
+    stacked = jax.vmap(lambda k: linear_init(k, 32, 8, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), 5))
+    stats = precompile({"b": stacked}, cfg, cache=small)
+    assert stats == {"layers": 1, "plans": 5, "built": 5}
+    assert small.capacity >= 5 and len(small) == 5
+    assert small.stats()["evictions"] == 0
