@@ -104,20 +104,29 @@ def run(smoke: bool = False):
          "smoke" if smoke else "ok")
 
 
-def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json"):
+def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
+                path: str = "engine_jit"):
     """Cached vs uncached serving: L layer weights x D decode steps.
 
     *uncached* is the pre-plan-cache serving behaviour (every forward call
-    re-plans the weight inside the callback); *cached* is the shipped path:
-    plans built once offline via PlanCache, decode run-only. Emits the
-    split to stdout and writes ``out`` for the CI perf trajectory."""
+    re-plans the weight inside the callback); *cached* is the shipped
+    host-engine path: plans built once offline via PlanCache, decode
+    run-only. With ``path="engine_jit"`` (the default) a third series runs
+    the same plans **device-resident** (DevicePlan + jit'd run_device, no
+    host numpy, no callback) and the JSON gains ``device_decode_us`` /
+    ``per_call_device_us``. Emits the split to stdout and writes ``out``
+    for the CI perf trajectory."""
     from repro.core.plancache import PlanCache
 
     layers, steps = (4, 8) if smoke else (8, 32)
     n = k = 64 if smoke else 256
     m = 4                                    # decode-like tall-skinny GEMM
     rng = np.random.default_rng(2)
-    ws = [synth_weights(n, k, 8, seed=s) for s in range(layers)]
+    # int8 like the serving path (the cache canonicalises dtype before
+    # fingerprinting, so all four series share one entry per weight
+    # either way; the misses guard below would catch a regression)
+    ws = [synth_weights(n, k, 8, seed=s).astype(np.int8)
+          for s in range(layers)]
     xs = [rng.integers(-128, 128, (k, m)) for _ in range(steps)]
     eng = BatchedTransitiveEngine(bits=8, t=8)
 
@@ -157,13 +166,78 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json"):
         "speedup_cached": us_uncached / us_cached,
         "cache": stats,
     }
+
+    if path == "engine_jit":
+        # (1) the shipped jit hot path being replaced: qlinear's
+        # pure_callback into the plan cache — per-call it pays the
+        # callback round trip + content hash on top of the numpy run
+        from repro.core import engine as E
+        from repro.core import plancache as PC
+        from repro.quant.qlinear import _engine_matmul
+        prev = PC.set_default_cache(cache)
+        try:
+            qxs = [jnp.asarray(x.T, jnp.int8) for x in xs]
+            qws = [jnp.asarray(w, jnp.int8) for w in ws]
+            fns = [jax.jit(lambda a, qw=qw: _engine_matmul(a, qw, 8, 8))
+                   for qw in qws]
+            for f in fns:
+                jax.block_until_ready(f(qxs[0]))
+            t0 = time.perf_counter()
+            for qx in qxs:
+                for f in fns:
+                    jax.block_until_ready(f(qx))
+            us_callback = (time.perf_counter() - t0) * 1e6
+        finally:
+            PC.set_default_cache(prev)
+
+        # (2) device-resident series: same cached plans, lowered to
+        # DevicePlan and executed as pure jit'd JAX — zero host callbacks.
+        # Compile+warmup amortise like plan-build.
+        t0 = time.perf_counter()
+        dplans = [cache.get_or_build_device(w, 8, 8) for w in ws]
+        xs_dev = [jnp.asarray(x) for x in xs]
+        for dp in dplans:                    # trace + compile, per shape
+            jax.block_until_ready(E.run_device_jit(dp, xs_dev[0]))
+        us_compile = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        for x in xs_dev:
+            for dp in dplans:
+                jax.block_until_ready(E.run_device_jit(dp, x))
+        us_device = (time.perf_counter() - t0) * 1e6
+        # bit-exactness vs the host engine (int32 ≡ int64 mod 2^32; smoke
+        # magnitudes don't overflow) — a wrong number here would make the
+        # emitted series meaningless
+        got = np.asarray(E.run_device_jit(dplans[0], xs_dev[0]))
+        want = cache.run(ws[0], xs[0], 8, 8)
+        np.testing.assert_array_equal(got, want)
+        # the callback and device series must have run against the plans
+        # built above — any new miss means a fingerprint diverged (e.g. a
+        # dtype change) and the comparison is meaningless
+        if cache.stats()["misses"] != layers:
+            raise RuntimeError(
+                f"device/callback series re-planned: {cache.stats()} "
+                f"(expected misses={layers})")
+        result.update({
+            "callback_decode_us": us_callback,
+            "per_call_callback_us": us_callback / calls,
+            "device_plan_compile_us": us_compile,
+            "device_decode_us": us_device,
+            "per_call_device_us": us_device / calls,
+            "speedup_device_vs_cached": us_cached / us_device,
+            "speedup_device_vs_callback": us_callback / us_device,
+        })
+
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
+    dev = (f" device_decode={result['device_decode_us']:.0f}us "
+           f"(x{result['speedup_device_vs_callback']:.1f} vs callback, "
+           f"x{result['speedup_device_vs_cached']:.1f} vs host run)"
+           if "device_decode_us" in result else "")
     emit("serve_plan_cache", us_cached,
          f"{layers} layers x {steps} steps {n}x{k}x{m}: "
          f"uncached={us_uncached:.0f}us plan_once={us_plan:.0f}us "
          f"cached_decode={us_cached:.0f}us "
-         f"speedup=x{result['speedup_cached']:.1f} "
+         f"speedup=x{result['speedup_cached']:.1f}{dev} "
          f"(misses={stats['misses']} hits={stats['hits']}) -> {out}")
 
 
@@ -176,8 +250,13 @@ if __name__ == "__main__":
                     "(the kernel microbench is its own invocation)")
     ap.add_argument("--json", default="BENCH_engine.json",
                     help="output path for the serving-bench JSON")
+    ap.add_argument("--path", default="engine_jit",
+                    choices=("engine", "engine_jit"),
+                    help="serve-bench decode series: 'engine' = host plan "
+                    "cache only, 'engine_jit' (default) adds the "
+                    "device-resident decode series")
     args = ap.parse_args()
     if args.serve_bench:
-        serve_bench(smoke=args.smoke, out=args.json)
+        serve_bench(smoke=args.smoke, out=args.json, path=args.path)
     else:
         run(smoke=args.smoke)

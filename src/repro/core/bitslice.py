@@ -46,7 +46,9 @@ def bit_planes(w: np.ndarray, bits: int) -> np.ndarray:
       uint8 array of shape (bits,) + w.shape with entries in {0, 1};
       plane ``s`` holds bit ``s`` of the 2's-complement representation.
     """
-    w = np.asarray(w)
+    # widen first: narrow int dtypes (int8 weights) overflow the 2's
+    # complement shift below under NumPy 2 scalar promotion
+    w = np.asarray(w).astype(np.int64, copy=False)
     lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
     if w.min(initial=0) < lo or w.max(initial=0) > hi:
         raise ValueError(f"values outside int{bits} range [{lo}, {hi}]")

@@ -24,6 +24,18 @@ bit-exactly — with three batched passes:
 Bit-exactness vs ``w.astype(i64) @ x.astype(i64)`` and vs the reference
 walker is enforced by tests/test_engine.py across random and adversarial
 weight patterns.
+
+**Device-resident plans.** :func:`compile_plan` lowers an
+:class:`ExecutionPlan` to a :class:`DevicePlan` — a pytree of static-shape
+int32 index arrays (gather-only per-level source maps, the direct-dispatch
+indices, and the APE gather table). :func:`run_device` then executes the
+whole forest as a fixed sequence of ``jnp`` gathers and adds with **no
+host callback**, so the same code path jits, vmaps and scans. Because
+plans of a given layer signature share leaf shapes
+(:func:`compile_plans`), plans for scan-stacked block weights stack into
+one leading axis and ride through ``lax.scan`` alongside the weights
+themselves — this is what lets the serving hot path retire
+``jax.pure_callback`` entirely (quant/qlinear.py ``path="engine_jit"``).
 """
 from __future__ import annotations
 
@@ -35,7 +47,9 @@ from repro.core import bitslice, hasse
 from repro.core.scoreboard import (MAX_DISTANCE, ScoreboardInfo,
                                    dynamic_scoreboard)
 
-__all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep"]
+__all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep",
+           "DevicePlan", "compile_plan", "compile_plans", "forest_body",
+           "run_device", "run_device_jit"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +80,58 @@ class ExecutionPlan:
     @property
     def n_tiles(self) -> int:
         return self.k // self.t
+
+    # -- persistence (npz) ------------------------------------------------
+    def save(self, path) -> None:
+        """Serialize the full plan (schedule + scoreboard) to an ``.npz``.
+
+        Everything is plain numpy, so a plan precompiled in one process can
+        be loaded in another (or shipped to a serving fleet) without paying
+        the scoreboard build again; :func:`ExecutionPlan.load` round-trips
+        bit-exactly (tests/test_engine.py)."""
+        cat = (np.concatenate if self.steps else
+               lambda _: np.zeros(0, np.int64))
+        np.savez(
+            path,
+            meta=np.array([self.t, self.bits, self.n, self.k, self.groups,
+                           self.si.t, self.si.n_rows], np.int64),
+            rows=self.rows,
+            steps_len=np.array([s.tile.size for s in self.steps], np.int64),
+            steps_tile=cat([s.tile for s in self.steps]),
+            steps_node=cat([s.node for s in self.steps]),
+            steps_prefix=cat([s.prefix for s in self.steps]),
+            steps_bit=cat([s.bit for s in self.steps]),
+            direct_tile=self.direct_tile, direct_node=self.direct_node,
+            direct_bits=self.direct_bits, signs=self.signs,
+            si_counts=self.si.counts, si_exec_counts=self.si.exec_counts,
+            si_bridge=self.si.bridge, si_distance=self.si.distance,
+            si_prefix=self.si.prefix, si_lane=self.si.lane,
+            si_outlier=self.si.outlier, si_wl_ppe=self.si.wl_ppe,
+            si_wl_ape=self.si.wl_ape)
+
+    @staticmethod
+    def load(path) -> "ExecutionPlan":
+        """Inverse of :meth:`save` — bit-exact reconstruction."""
+        z = np.load(path)
+        t, bits, n, k, groups, si_t, si_n_rows = (int(v) for v in z["meta"])
+        lens = z["steps_len"]
+        bounds = np.cumsum(lens)[:-1]
+        fields = (np.split(z[f"steps_{f}"], bounds) if lens.size else []
+                  for f in ("tile", "node", "prefix", "bit"))
+        steps = tuple(LevelStep(tile=tl, node=nd, prefix=pre, bit=bit)
+                      for tl, nd, pre, bit in zip(*fields))
+        si = ScoreboardInfo(
+            t=si_t, n_rows=si_n_rows, counts=z["si_counts"],
+            exec_counts=z["si_exec_counts"], bridge=z["si_bridge"],
+            distance=z["si_distance"], prefix=z["si_prefix"],
+            lane=z["si_lane"], outlier=z["si_outlier"],
+            wl_ppe=z["si_wl_ppe"], wl_ape=z["si_wl_ape"])
+        return ExecutionPlan(t=t, bits=bits, n=n, k=k, rows=z["rows"],
+                             si=si, steps=steps,
+                             direct_tile=z["direct_tile"],
+                             direct_node=z["direct_node"],
+                             direct_bits=z["direct_bits"],
+                             signs=z["signs"], groups=groups)
 
 
 class BatchedTransitiveEngine:
@@ -180,3 +246,199 @@ class BatchedTransitiveEngine:
 
     def __call__(self, w: np.ndarray, x: np.ndarray) -> np.ndarray:
         return self.run(self.plan(w), x)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident plans: the level-synchronous forest as pure JAX
+# ---------------------------------------------------------------------------
+#
+# plan()/run() above are pure numpy, but importing this module requires
+# jax from here down (DevicePlan pytree registration + the module-level
+# jitted runner) — like every other serving-path module in the repo.
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DevicePlan:
+    """A compiled, device-resident execution schedule (pytree of int32).
+
+    All index arrays are *flat*: the (tiles, 2^T, M) psum table of the host
+    engine becomes one (J * 2^T, M) buffer, node ``v`` of tile ``j`` lives
+    at row ``j * 2^T + v``, and activation row ``b`` of tile ``j`` at row
+    ``j * T + b`` of the (K, M) input.
+
+    The level-synchronous schedule is stored **gather-only**: instead of a
+    ragged edge list that would scatter into the psum table (XLA scatters
+    carry a large fixed cost per op, and ragged lists need cross-layer
+    padding), each level holds a *complete* source map over all ``J * 2^T``
+    rows — a row executed at this level gathers its covering prefix's psum
+    plus one activation row; every other row gathers itself and a pinned
+    zero activation row (index ``K``, one past the input). Each level is
+    then two gathers and an add, the shapes depend only on the layer
+    signature (never on weight content), and identically-shaped plans
+    stack along a leading axis with no re-padding — the layout ``lax.scan``
+    wants for scan-stacked block weights. Plans ride *inside the params*
+    of a scanned model (core/plancache.attach_device_plans), so the
+    serving hot path runs with zero host callbacks.
+
+    The one remaining scatter (direct dispatch of outliers and prefix-less
+    roots) happens once per call; its padding lanes target one-past-end
+    rows and are discarded by ``mode="drop"``.
+    """
+    # static schedule signature (pytree aux data)
+    t: int
+    bits: int
+    n: int
+    k: int
+    groups: int
+    # gather-only level maps over the full flat psum table (R = J * 2^T)
+    level_src: jnp.ndarray     # (T, R) int32 — psum row to gather (self if
+    #                            the row is not executed at this level)
+    level_xsrc: jnp.ndarray    # (T, R) int32 — activation row j*T+bit, or
+    #                            K (the pinned zero row) for identity lanes
+    # direct dispatch (outliers + prefix-less roots), padded to (D,)
+    direct_idx: jnp.ndarray    # (D,) int32 — scatter target (pad: J*2^T)
+    direct_x_idx: jnp.ndarray  # (D, T) int32 — activation rows (pad: 0)
+    direct_bits: jnp.ndarray   # (D, T) int32 {0,1} — subset mask (pad: 0)
+    # APE shift-accumulate
+    gather_idx: jnp.ndarray    # (S, N, J) int32 — flat psum rows per TransRow
+    signs: jnp.ndarray         # (S,) int32 — 2's-complement plane weights
+
+    @property
+    def n_tiles(self) -> int:
+        return self.k // self.t
+
+
+jax.tree_util.register_dataclass(
+    DevicePlan,
+    data_fields=["level_src", "level_xsrc", "direct_idx", "direct_x_idx",
+                 "direct_bits", "gather_idx", "signs"],
+    meta_fields=["t", "bits", "n", "k", "groups"])
+
+
+def compile_plan(plan: ExecutionPlan, *,
+                 direct_pad: int | None = None) -> DevicePlan:
+    """Lower an :class:`ExecutionPlan` to device-resident index arrays.
+
+    ``direct_pad`` overrides the minimal direct-dispatch width so that
+    plans of the same layer signature get identical leaf shapes — the
+    precondition for stacking them (:func:`compile_plans`) and for sharing
+    one jit trace across layers. The level maps are already
+    signature-shaped.
+    """
+    t, size, j = plan.t, 1 << plan.t, plan.n_tiles
+    invalid = j * size                       # one-past-end: dropped scatter
+    r = j * size
+    level_src = np.tile(np.arange(r, dtype=np.int32), (t, 1))
+    level_xsrc = np.full((t, r), plan.k, np.int32)   # K = pinned zero row
+    lvl_of = hasse.levels(t)
+    for s in plan.steps:
+        lv = int(lvl_of[int(s.node[0])])     # all nodes of a step share it
+        rows = (s.tile * size + s.node).astype(np.int64)
+        level_src[lv - 1, rows] = s.tile * size + s.prefix
+        level_xsrc[lv - 1, rows] = s.tile * t + s.bit
+
+    d_need = plan.direct_tile.size
+    d = d_need if direct_pad is None else int(direct_pad)
+    if d < d_need:
+        raise ValueError(f"direct_pad={d} < direct nodes {d_need}")
+    d = max(d, 1)
+    direct_idx = np.full((d,), invalid, np.int32)
+    direct_x_idx = np.zeros((d, t), np.int32)
+    direct_bits = np.zeros((d, t), np.int32)
+    if d_need:
+        direct_idx[:d_need] = plan.direct_tile * size + plan.direct_node
+        direct_x_idx[:d_need] = (plan.direct_tile[:, None] * t
+                                 + np.arange(t, dtype=np.int64))
+        direct_bits[:d_need] = plan.direct_bits
+
+    gather_idx = (np.arange(j, dtype=np.int64)[None, None, :] * size
+                  + plan.rows).astype(np.int32)
+    return DevicePlan(
+        t=t, bits=plan.bits, n=plan.n, k=plan.k, groups=plan.groups,
+        level_src=jnp.asarray(level_src),
+        level_xsrc=jnp.asarray(level_xsrc),
+        direct_idx=jnp.asarray(direct_idx),
+        direct_x_idx=jnp.asarray(direct_x_idx),
+        direct_bits=jnp.asarray(direct_bits),
+        gather_idx=jnp.asarray(gather_idx),
+        signs=jnp.asarray(plan.signs.astype(np.int32)))
+
+
+def compile_plans(plans) -> DevicePlan:
+    """Compile several same-signature plans into ONE stacked DevicePlan.
+
+    Pads every plan to the shared direct-dispatch bound (the level maps are
+    signature-shaped already), then stacks each leaf along a new leading
+    axis — the layout ``lax.scan`` wants for plans of scan-stacked block
+    weights. Raises if signatures differ.
+    """
+    plans = list(plans)
+    if not plans:
+        raise ValueError("compile_plans needs at least one plan")
+    sig = {(p.t, p.bits, p.n, p.k, p.groups) for p in plans}
+    if len(sig) != 1:
+        raise ValueError(f"cannot stack plans of differing signatures {sig}")
+    d = max(p.direct_tile.size for p in plans)
+    dps = [compile_plan(p, direct_pad=d) for p in plans]
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *dps)
+
+
+def forest_body(xt, level_src, level_xsrc, direct_idx, direct_x_idx,
+                direct_bits, gather_idx, signs, *, t: int, groups: int,
+                n: int, k: int) -> jnp.ndarray:
+    """The forest schedule on plain arrays: int32 xt (K, M) -> (N, G, M).
+
+    The single pure-jnp body behind BOTH device backends —
+    :func:`run_device` and the Pallas kernel
+    (kernels/transitive_forest.py) pass the same DevicePlan leaves here,
+    so their bit-exactness is shared code, not two hand-synced copies.
+    """
+    size = 1 << t
+    j = k // t
+    m = xt.shape[1]
+    # pinned zero row at index K: identity lanes add nothing
+    xt_ext = jnp.concatenate([xt, jnp.zeros((1, m), jnp.int32)])
+
+    # direct dispatch: subset sums of each outlier/root pattern's bits
+    contrib = (direct_bits[:, :, None]
+               * xt[direct_x_idx]).sum(axis=1)             # (D, M)
+    psum = jnp.zeros((j * size, m), jnp.int32)
+    psum = psum.at[direct_idx].set(contrib, mode="drop")
+
+    # level-synchronous forest, gather-only: every row advances as
+    # psum[src] + x[xsrc]; non-executed rows gather themselves + zero
+    def level(ps, edges):
+        src, xsrc = edges
+        return ps[src] + xt_ext[xsrc], None
+    psum, _ = jax.lax.scan(level, psum, (level_src, level_xsrc))
+
+    # APE shift-accumulate: gather every TransRow's psum, reduce per group
+    s = signs.shape[0]
+    jg = j // groups
+    gathered = (psum[gather_idx.reshape(-1)]
+                .reshape(s, n, groups, jg, m).sum(axis=3))    # (S, N, G, M)
+    return (signs[:, None, None, None] * gathered).sum(axis=0)
+
+
+def run_device(dplan: DevicePlan, x: jnp.ndarray) -> jnp.ndarray:
+    """Execute a compiled forest against activations ``x`` (K, M) — pure jnp.
+
+    Returns int32 (N, M) for an ungrouped plan, (N, G, M) per-group partials
+    for a grouped one. Accumulates in int32, which is congruent mod 2^32
+    with the host engine's int64 pipeline — i.e. bit-exact with the
+    ``int_dot`` path's int32 accumulator. Composes with jit / vmap / scan;
+    the lowered jaxpr contains no ``pure_callback``.
+    """
+    if x.ndim != 2 or x.shape[0] != dplan.k:
+        raise ValueError(f"x must be (K={dplan.k}, M), got {x.shape}")
+    out = forest_body(
+        x.astype(jnp.int32), dplan.level_src, dplan.level_xsrc,
+        dplan.direct_idx, dplan.direct_x_idx, dplan.direct_bits,
+        dplan.gather_idx, dplan.signs, t=dplan.t, groups=dplan.groups,
+        n=dplan.n, k=dplan.k)
+    return out[:, 0] if dplan.groups == 1 else out
+
+
+run_device_jit = jax.jit(run_device)

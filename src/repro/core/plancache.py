@@ -23,28 +23,47 @@ weight *update* naturally misses — and :meth:`PlanCache.invalidate` drops
 the stale entry explicitly so updated-weight serving does not leak plans
 until LRU pressure finds them. Content keys make correctness unconditional
 (no way to serve a stale plan) at the cost of hashing the int8 weight bytes
-per lookup; that is noise next to this host-numpy engine's ``run``, but a
-hardware lowering should switch the hot path to per-layer version tags and
-keep content hashing for :meth:`invalidate` (see ROADMAP).
+per lookup. Callers that manage their own weight identity (a layer id plus
+a step counter, say) can pass ``version=`` instead: the tag becomes the
+lookup key and the bytes are only hashed once, at build time, so
+:meth:`invalidate` stays content-based and can still find version-keyed
+entries when the weight updates.
 
-Plain numpy + stdlib — this is host-side state next to the host-side
-engine; nothing here traces under jit.
+Two plan representations live behind the same keys: the host-numpy
+:class:`~repro.core.engine.ExecutionPlan` (built once per weight) and the
+device-resident :class:`~repro.core.engine.DevicePlan` it lowers to
+(:meth:`get_or_build_device`, compiled lazily from the cached host plan).
+:func:`attach_device_plans` embeds compiled plans *into a params pytree* —
+stacked along any vmap/scan leading axes — which is how the pure-JAX
+``path="engine_jit"`` serving hot path (quant/qlinear.py) sees plans for
+weights that are tracers inside the model's block scan.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import threading
 from collections import OrderedDict
-from typing import Any, Iterator
+from typing import Any, Hashable, Iterator
 
 import numpy as np
 
-from repro.core.engine import BatchedTransitiveEngine, ExecutionPlan
+from repro.core.engine import (BatchedTransitiveEngine, DevicePlan,
+                               ExecutionPlan, compile_plan, compile_plans)
 
 __all__ = ["PlanCache", "weight_fingerprint", "default_cache",
-           "set_default_cache", "precompile"]
+           "set_default_cache", "precompile", "attach_device_plans"]
 
-PlanKey = tuple[str, int, int, int]
+# ("fp", content-hash, bits, t, groups) or ("v", version-tag, bits, t, groups)
+PlanKey = tuple
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached weight: host plan + content hash + lazy device lowering."""
+    plan: ExecutionPlan
+    fingerprint: str
+    device: DevicePlan | None = None
 
 
 def weight_fingerprint(qw: np.ndarray) -> str:
@@ -54,6 +73,31 @@ def weight_fingerprint(qw: np.ndarray) -> str:
     h.update(repr((a.shape, a.dtype.str)).encode())
     h.update(a.tobytes())
     return h.hexdigest()
+
+
+def _canonical(qw: np.ndarray) -> np.ndarray:
+    """Canonical int8 view of a quantized weight for cache keying.
+
+    The plan built from a weight depends on its *values*, not its array
+    dtype — but the fingerprint hashes bytes, so the same weight passed
+    as int8 (the qlinear callback view) and int64 (a precompile walk)
+    would otherwise double-plan under two keys. int8 is the repo's
+    quantized-weight universe (w_bits <= 8) and also makes the per-call
+    content hash 8x cheaper than int64 bytes. Range-guarded: a silent
+    wrap here would build a plan for the wrong values.
+    """
+    qw = np.asarray(qw)
+    if not np.issubdtype(qw.dtype, np.integer):
+        raise TypeError(f"quantized weights must be integer, got {qw.dtype}")
+    if qw.dtype != np.int8:
+        # wider dtypes need the wrap guard + a conversion copy; int8 input
+        # (the serving hot path) passes through untouched — no value scan
+        if qw.size and (qw.min() < -128 or qw.max() > 127):
+            raise ValueError(
+                "weight values outside int8 range — PlanCache covers "
+                "int8-range quantized weights (w_bits <= 8)")
+        qw = qw.astype(np.int8)
+    return qw
 
 
 class PlanCache:
@@ -69,7 +113,7 @@ class PlanCache:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._plans: OrderedDict[PlanKey, ExecutionPlan] = OrderedDict()
+        self._plans: OrderedDict[PlanKey, _Entry] = OrderedDict()
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
@@ -77,47 +121,121 @@ class PlanCache:
         self.invalidations = 0
 
     # -- lookup / build ---------------------------------------------------
+    def _entry(self, qw: np.ndarray, w_bits: int, t: int, groups: int,
+               version: Hashable | None) -> _Entry:
+        """Shared lookup/build path; counts one hit or one miss."""
+        qw = np.asarray(qw)
+        if qw.ndim != 2:
+            raise ValueError(f"qw must be 2-D (N, K), got {qw.shape}")
+        sig = (int(w_bits), int(t), int(groups))
+        with self._lock:
+            fp = None
+            if version is not None:
+                # fast key: the weight array is not even scanned on a hit
+                key = ("v", version) + sig
+            else:
+                # canonical values (any dtype -> one key), then hash
+                qw = _canonical(qw)
+                fp = weight_fingerprint(qw)
+                key = ("fp", fp) + sig
+            entry = self._plans.get(key)
+            if entry is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return entry
+            if version is not None:
+                qw = _canonical(qw)        # build path only
+            self.misses += 1
+            plan = BatchedTransitiveEngine(bits=w_bits, t=t).plan(
+                qw.astype(np.int64, copy=False), groups=groups)
+            # content hash stored regardless of key scheme: invalidate()
+            # finds version-keyed entries by weight content too
+            entry = _Entry(plan=plan,
+                           fingerprint=fp or weight_fingerprint(qw))
+            self._plans[key] = entry
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+            return entry
+
     def get_or_build(self, qw: np.ndarray, w_bits: int, t: int,
-                     groups: int = 1) -> ExecutionPlan:
+                     groups: int = 1, *,
+                     version: Hashable | None = None) -> ExecutionPlan:
         """Return the cached plan for ``qw`` (N, K), building it on miss.
 
         ``qw`` is the full 2-D integer weight with all quantization groups
         concatenated along K; grouped layers pass ``groups=G`` and get one
-        batched plan covering every group.
+        batched plan covering every group. With ``version=`` the caller's
+        tag (layer id + step counter, any hashable) is the cache key and
+        the weight bytes are hashed only when the plan is first built —
+        the fast path for serving loops that would otherwise fingerprint
+        identical bytes on every call. A given weight must be looked up
+        under one scheme consistently; mixing builds it twice.
+
+        Version keys trade away the content key's staleness immunity: a
+        reused tag over *updated* weight bytes returns the old plan. Bump
+        the tag on every weight update (that is what the step counter is
+        for), or drop it via :meth:`invalidate_version` /
+        :meth:`invalidate` with the OLD bytes, before looking up again.
         """
-        qw = np.asarray(qw)
-        if qw.ndim != 2:
-            raise ValueError(f"qw must be 2-D (N, K), got {qw.shape}")
-        key = (weight_fingerprint(qw), int(w_bits), int(t), int(groups))
-        with self._lock:
-            plan = self._plans.get(key)
-            if plan is not None:
-                self.hits += 1
-                self._plans.move_to_end(key)
-                return plan
-            self.misses += 1
-            plan = BatchedTransitiveEngine(bits=w_bits, t=t).plan(
-                qw.astype(np.int64, copy=False), groups=groups)
-            self._plans[key] = plan
-            while len(self._plans) > self.capacity:
-                self._plans.popitem(last=False)
-                self.evictions += 1
-            return plan
+        return self._entry(qw, w_bits, t, groups, version).plan
+
+    def get_or_build_device(self, qw: np.ndarray, w_bits: int, t: int,
+                            groups: int = 1, *,
+                            version: Hashable | None = None) -> DevicePlan:
+        """Like :meth:`get_or_build`, but returns the device lowering.
+
+        The :class:`DevicePlan` is compiled once from the cached host plan
+        and memoised on the entry; repeated calls return the same pytree
+        (so jit caches keyed on leaf shapes stay warm)."""
+        entry = self._entry(qw, w_bits, t, groups, version)
+        if entry.device is None:
+            # lower OUTSIDE the lock — index-array construction + device
+            # transfer must not block concurrent hot-path lookups.
+            # Double-checked: a racing compile keeps the first pytree.
+            device = compile_plan(entry.plan)
+            with self._lock:
+                if entry.device is None:
+                    entry.device = device
+        return entry.device
 
     def run(self, qw: np.ndarray, x: np.ndarray, w_bits: int, t: int,
-            groups: int = 1) -> np.ndarray:
+            groups: int = 1, *,
+            version: Hashable | None = None) -> np.ndarray:
         """Cached GEMM: plan on first sight of ``qw``, run-only after."""
-        plan = self.get_or_build(qw, w_bits, t, groups)
+        plan = self.get_or_build(qw, w_bits, t, groups, version=version)
         return BatchedTransitiveEngine(bits=plan.bits, t=plan.t).run(plan, x)
 
     # -- invalidation -----------------------------------------------------
     def invalidate(self, qw: np.ndarray) -> int:
-        """Drop every cached plan for this weight content (any bits/T/groups).
+        """Drop every cached plan built FROM this weight content (any
+        bits/T/groups — version-keyed entries included, via the
+        fingerprint stored at build time).
 
-        Call on weight update; returns the number of entries removed."""
-        fp = weight_fingerprint(qw)
+        Pass the bytes the stale plans were built from, i.e. the **old**
+        weights: hashing the new bytes matches nothing. When an in-place
+        update has destroyed the old bytes, version-keyed callers use
+        :meth:`invalidate_version` (or simply bump the tag) instead.
+        Returns the number of entries removed."""
+        fp = weight_fingerprint(_canonical(qw))
         with self._lock:
-            stale = [k for k in self._plans if k[0] == fp]
+            stale = [k for k, e in self._plans.items()
+                     if e.fingerprint == fp]
+            for k in stale:
+                del self._plans[k]
+            self.invalidations += len(stale)
+            return len(stale)
+
+    def invalidate_version(self, version: Hashable) -> int:
+        """Drop every version-keyed entry with this tag (any bits/T/groups).
+
+        The tag-side counterpart of :meth:`invalidate` for weight updates
+        where the old bytes are gone (in-place param donation): without
+        it, a reused tag would serve the old weights' plan silently.
+        Returns the number of entries removed."""
+        with self._lock:
+            stale = [k for k in self._plans
+                     if k[0] == "v" and k[1] == version]
             for k in stale:
                 del self._plans[k]
             self.invalidations += len(stale)
@@ -183,12 +301,21 @@ def set_default_cache(cache: PlanCache) -> PlanCache:
 
 # -- offline precompile pass ------------------------------------------------
 
+def _is_ptq_layer(tree: Any) -> bool:
+    """The one definition of 'this dict is a PTQ linear layer'."""
+    return isinstance(tree, dict) and "qw" in tree and "sg" in tree
+
+
+def _layer_groups(sg: np.ndarray) -> int:
+    """sg's trailing axis is the per-group scale count: 1 = per-channel."""
+    return int(sg.shape[-1]) if sg.ndim else 1
+
+
 def _iter_ptq_layers(tree: Any) -> Iterator[tuple[np.ndarray, np.ndarray]]:
     """Yield (qw, sg) leaf pairs from a params pytree of nested dicts."""
-    if isinstance(tree, dict):
-        if "qw" in tree and "sg" in tree:
-            yield np.asarray(tree["qw"]), np.asarray(tree["sg"])
-            return
+    if _is_ptq_layer(tree):
+        yield np.asarray(tree["qw"]), np.asarray(tree["sg"])
+    elif isinstance(tree, dict):
         for v in tree.values():
             yield from _iter_ptq_layers(v)
     elif isinstance(tree, (list, tuple)):
@@ -221,8 +348,7 @@ def precompile(params: Any, cfg: Any,
     layers = plans = 0
     for qw, sg in leaves:
         layers += 1
-        # sg's trailing axis is the per-group scale count: 1 = per-channel.
-        groups = int(sg.shape[-1]) if sg.ndim else 1
+        groups = _layer_groups(sg)
         lead = qw.shape[:-2]
         for idx in np.ndindex(*lead):
             cache.get_or_build(qw[idx], cfg.w_bits, cfg.transrow_t,
@@ -230,3 +356,66 @@ def precompile(params: Any, cfg: Any,
             plans += 1
     return {"layers": layers, "plans": plans,
             "built": cache.stats()["misses"] - misses0}
+
+
+def attach_device_plans(params: Any, cfg: Any,
+                        cache: PlanCache | None = None) -> Any:
+    """Return a copy of ``params`` with a compiled ``"dplan"`` per PTQ layer.
+
+    For every ``{"qw", "sg"}`` layer dict the quantized weight's
+    :class:`DevicePlan` is compiled and embedded next to the weight; leaves
+    with vmap/scan leading axes get one plan per slice, padded to shared
+    bounds and **stacked along the same leading axes**, so ``lax.scan``
+    over stacked super-blocks slices the plan exactly like it slices the
+    weight. ``quant/qlinear.py`` ``path="engine_jit"``/``"engine_pallas"``
+    then execute pure-JAX from the embedded plan even where ``qw`` is a
+    tracer — the host callback is gone from the hot path entirely.
+
+    Host ExecutionPlans are built through ``cache`` (default: process
+    cache), so a preceding :func:`precompile` warmup is reused, not
+    repeated. ``cfg`` needs ``w_bits`` and ``transrow_t`` (a
+    ``QuantConfig`` works).
+
+    An embedded plan is a snapshot: it is only as fresh as this call. On
+    any weight update, ``invalidate`` the cache **and re-attach** — the
+    qlinear consistency check catches config/shape drift but cannot see
+    weight content (the weight is a tracer on the hot path).
+    """
+    import jax
+
+    cache = default_cache() if cache is None else cache
+    # size the cache to the model before building, like precompile: the
+    # attach walk must not LRU-evict its own (or a prior warmup's) plans
+    cache.reserve(sum(
+        int(np.prod(qw.shape[:-2], dtype=np.int64))
+        for qw, _ in _iter_ptq_layers(params)))
+
+    def walk(tree: Any) -> Any:
+        if isinstance(tree, dict):
+            if _is_ptq_layer(tree):
+                qw = np.asarray(tree["qw"])
+                sg = np.asarray(tree["sg"])
+                groups = _layer_groups(sg)
+                lead = qw.shape[:-2]
+                if lead:
+                    # stacked leaves share direct-dispatch bounds, so they
+                    # are lowered together rather than via the per-entry
+                    # device memo
+                    plans = [cache.get_or_build(qw[idx], cfg.w_bits,
+                                                cfg.transrow_t, groups)
+                             for idx in np.ndindex(*lead)]
+                    dplan = jax.tree.map(
+                        lambda a: a.reshape(lead + a.shape[1:]),
+                        compile_plans(plans))
+                else:
+                    dplan = cache.get_or_build_device(
+                        qw, cfg.w_bits, cfg.transrow_t, groups)
+                return {**tree, "dplan": dplan}
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v) for v in tree]
+        if isinstance(tree, tuple):
+            return tuple(walk(v) for v in tree)
+        return tree
+
+    return walk(params)

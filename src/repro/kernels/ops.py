@@ -11,11 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.transitive_gemm import transitive_gemm_pallas
+from repro.kernels.transitive_forest import transitive_forest
 from repro.kernels.w4a8_gemm import w4a8_gemm_pallas
 from repro.kernels.rg_lru import rg_lru_pallas
 
-__all__ = ["transitive_gemm", "transitive_gemm_grouped", "w4a8_gemm",
-           "rg_lru", "default_interpret"]
+__all__ = ["transitive_gemm", "transitive_gemm_grouped", "transitive_forest",
+           "w4a8_gemm", "rg_lru", "default_interpret"]
 
 
 def default_interpret() -> bool:

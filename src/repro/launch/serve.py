@@ -10,6 +10,11 @@ layer's ExecutionPlan is built exactly once (offline precompile over the
 params pytree), decode is run-only, and the report splits plan-build time
 from decode time and prints the cache counters (misses == distinct
 quantized weights, hits == remaining engine forward calls).
+
+``--path engine_jit`` (and ``engine_pallas``) go further: the compiled
+plans are **device-resident** — embedded into the params pytree
+(``Model.attach_device_plans``) so the block scan slices them alongside
+the weights — and decode runs pure JAX with zero host callbacks.
 """
 from __future__ import annotations
 
@@ -34,7 +39,8 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--w-bits", type=int, default=4, choices=(4, 8))
     ap.add_argument("--path", default="int_dot",
-                    choices=("int_dot", "lut", "pallas", "engine"),
+                    choices=("int_dot", "lut", "pallas", "engine",
+                             "engine_jit", "engine_pallas"),
                     help="integer-GEMM execution path for PTQ linears")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fp", action="store_true",
@@ -50,8 +56,10 @@ def main():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    engine_path = not args.fp and args.path == "engine"
-    plan_stats, t_plan = {}, 0.0
+    engine_path = not args.fp and args.path in ("engine", "engine_jit",
+                                                "engine_pallas")
+    device_path = engine_path and args.path != "engine"
+    plan_stats, t_plan, t_attach = {}, 0.0, 0.0
     if engine_path:
         from repro.core import plancache
         cache = plancache.default_cache()
@@ -60,6 +68,12 @@ def main():
             t0 = time.time()
             plan_stats = model.precompile_plans(params)
             t_plan = time.time() - t0
+        if device_path:
+            # device paths need plans as traced data inside the block scan;
+            # attach builds any still-missing plan through the same cache
+            t0 = time.time()
+            params = model.attach_device_plans(params)
+            t_attach = time.time() - t0
 
     key = jax.random.PRNGKey(1)
     batch = {"tokens": jax.random.randint(
@@ -79,10 +93,14 @@ def main():
           f"in {dt:.2f}s")
     if engine_path:
         s = cache.stats()
+        attach = (f" + device-plan attach {t_attach:.2f}s"
+                  if device_path else "")
+        decode = ("pure-JAX, zero host callbacks" if device_path
+                  else "run-only")
         print(f"[plan cache] offline plan-build {t_plan:.2f}s "
               f"({plan_stats.get('plans', 0)} plans over "
-              f"{plan_stats.get('layers', 0)} stacked layer weights) | "
-              f"decode {dt:.2f}s run-only")
+              f"{plan_stats.get('layers', 0)} stacked layer weights)"
+              f"{attach} | decode {dt:.2f}s {decode}")
         print(f"[plan cache] misses={s['misses']} hits={s['hits']} "
               f"evictions={s['evictions']} size={s['size']}")
         if s["misses"] != plan_stats.get("built", s["misses"]):

@@ -146,13 +146,31 @@ class Model:
         **process-level** plan cache — the only cache the qlinear hot-path
         callbacks consult (swap it via ``plancache.set_default_cache``) —
         so decode only ever pays ``run``. No-op (empty stats) unless this
-        model serves through ``path="engine"``.
+        model serves through an engine path (``engine`` / ``engine_jit`` /
+        ``engine_pallas``).
         """
         q = self.cfg.quant
-        if q.mode != "ptq" or q.path != "engine":
+        if q.mode != "ptq" or q.path not in ("engine", "engine_jit",
+                                             "engine_pallas"):
             return {"layers": 0, "plans": 0, "built": 0}
         from repro.core import plancache
         return plancache.precompile(params, q)
+
+    def attach_device_plans(self, params: Params) -> Params:
+        """Embed compiled DevicePlans into the params for pure-JAX serving.
+
+        The device-resident half of the offline split: every PTQ layer
+        gains a ``"dplan"`` pytree (stacked along scan-stacked leading
+        axes) that ``lax.scan`` slices alongside the weights, so the
+        ``engine_jit`` / ``engine_pallas`` qlinear paths execute with zero
+        host callbacks even though block weights are tracers inside the
+        scan. No-op unless this model serves through one of those paths.
+        """
+        q = self.cfg.quant
+        if q.mode != "ptq" or q.path not in ("engine_jit", "engine_pallas"):
+            return params
+        from repro.core import plancache
+        return plancache.attach_device_plans(params, q)
 
     # ---- shared ------------------------------------------------------------
     def _embed_tokens(self, params, tokens):

@@ -16,7 +16,17 @@ Three operating modes:
       - ``engine``:  the batched multi-tile scoreboard engine
                      (core/engine.py) on the host via pure_callback — the
                      faithful Scoreboard-forest dataflow, bit-exact with
-                     int_dot.
+                     int_dot. Kept as the oracle alongside transitive_ref.
+      - ``engine_jit``: the same planned forest executed **device-resident**
+                     (core/engine.py DevicePlan + run_device): pure jnp
+                     gathers/scatters under jit, zero host callbacks. Plans
+                     come from the process plan cache at trace time when the
+                     weight is concrete, or from a ``"dplan"`` embedded in
+                     the params (plancache.attach_device_plans) when the
+                     weight is a tracer — e.g. inside the model's block
+                     scan.
+      - ``engine_pallas``: the DevicePlan forest as a Pallas kernel
+                     (kernels/transitive_forest.py; interpret on CPU).
 
 All paths share the same quantization, so they agree bit-exactly on the
 int32 accumulator (property-tested).
@@ -44,7 +54,8 @@ class QuantConfig:
     w_bits: int = 8
     a_bits: int = 8
     group: int = 128          # group size along d_in (exact paths / qat)
-    path: str = "int_dot"     # int_dot | lut | pallas | engine
+    # int_dot | lut | pallas | engine | engine_jit | engine_pallas
+    path: str = "int_dot"
     transrow_t: int = 8       # TransRow width for transitive paths
 
     def with_(self, **kw) -> "QuantConfig":
@@ -129,6 +140,67 @@ def _engine_matmul_grouped(xg: jnp.ndarray, wg: jnp.ndarray, w_bits: int,
                                     vmap_method="expand_dims")
 
 
+def _device_plan(params, qw: jnp.ndarray, w_bits: int, t: int, groups: int):
+    """Resolve the DevicePlan for the engine_jit / engine_pallas paths.
+
+    Preference order: a ``"dplan"`` embedded in the params (survives jit /
+    vmap / scan — the weight may be a tracer there), else a trace-time
+    process-cache lookup, which needs the weight concrete."""
+    dplan = params.get("dplan")
+    if dplan is not None:
+        # consistency of everything checkable under trace. Weight CONTENT
+        # cannot be checked here (qw may be a tracer): an embedded plan is
+        # only as fresh as the last attach_device_plans — re-attach after
+        # any weight update, or the old weights' GEMM comes back silently.
+        sig = (dplan.bits, dplan.t, dplan.n, dplan.k, dplan.groups)
+        want = (w_bits, t, qw.shape[-2], qw.shape[-1], groups)
+        if sig != want:
+            raise ValueError(
+                f"attached plan signature (bits, t, n, k, groups)={sig} "
+                f"does not match the layer's {want} — re-attach with the "
+                f"serving QuantConfig")
+        return dplan
+    if isinstance(qw, jax.core.Tracer):
+        raise ValueError(
+            "path='engine_jit'/'engine_pallas' saw a traced weight with no "
+            "attached plan: embed plans with "
+            "plancache.attach_device_plans(params, cfg) (or "
+            "Model.attach_device_plans) before jit, or close the params "
+            "over the jit. path='engine' (host callback) also handles "
+            "traced weights.")
+    import numpy as np
+    from repro.core import plancache
+    return plancache.default_cache().get_or_build_device(
+        np.asarray(qw), w_bits, t, groups)
+
+
+def _run_dplan(dplan, flat: jnp.ndarray, path: str) -> jnp.ndarray:
+    """Shared backend dispatch: flat (K, B) activations through the plan."""
+    if path == "engine_pallas":
+        from repro.kernels import transitive_forest
+        return transitive_forest.transitive_forest(dplan, flat)
+    from repro.core import engine
+    return engine.run_device_jit(dplan, flat)
+
+
+def _engine_matmul_device(qx: jnp.ndarray, dplan, path: str) -> jnp.ndarray:
+    """Device-resident forest GEMM: qx (..., K) -> int32 (..., N).
+
+    Pure JAX end to end — the lowered jaxpr contains no pure_callback."""
+    flat = qx.reshape(-1, qx.shape[-1]).astype(jnp.int32).T    # (K, B)
+    y = _run_dplan(dplan, flat, path)                          # (N, B)
+    return y.T.reshape(qx.shape[:-1] + (dplan.n,))
+
+
+def _engine_matmul_device_grouped(xg: jnp.ndarray, dplan,
+                                  path: str) -> jnp.ndarray:
+    """Grouped device forest: xg (..., G, g) -> int32 (..., G, N)."""
+    n_groups, g = xg.shape[-2], xg.shape[-1]
+    flat = xg.reshape(-1, n_groups * g).astype(jnp.int32).T
+    y = _run_dplan(dplan, flat, path)                          # (N, G, B)
+    return y.transpose(2, 1, 0).reshape(xg.shape[:-1] + (dplan.n,))
+
+
 def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     qw, sg = params["qw"], params["sg"]
     d_out, d_in = qw.shape
@@ -145,6 +217,9 @@ def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
                                       t=cfg.transrow_t)
         elif cfg.path == "engine":
             y32 = _engine_matmul(qx, qw, cfg.w_bits, cfg.transrow_t)
+        elif cfg.path in ("engine_jit", "engine_pallas"):
+            dplan = _device_plan(params, qw, cfg.w_bits, cfg.transrow_t, 1)
+            y32 = _engine_matmul_device(qx, dplan, cfg.path)
         else:
             y32 = _int_matmul(qx, qw)
         y = y32.astype(jnp.float32) * sx * sg[:, 0]
@@ -163,6 +238,10 @@ def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
                                                t=cfg.transrow_t)
         elif cfg.path == "engine":
             part = _engine_matmul_grouped(xg, wg, cfg.w_bits, cfg.transrow_t)
+        elif cfg.path in ("engine_jit", "engine_pallas"):
+            dplan = _device_plan(params, qw, cfg.w_bits, cfg.transrow_t,
+                                 d_in // g)
+            part = _engine_matmul_device_grouped(xg, dplan, cfg.path)
         else:
             part = jnp.einsum("...gi,ngi->...gn", xg, wg,
                               preferred_element_type=jnp.int32)

@@ -2,14 +2,18 @@
 
 The testing pyramid (docs/TESTING.md): plain ``W.astype(i64) @ X`` is the
 ground truth; core/transitive_ref.py is the row-at-a-time oracle; the
-batched engine, the Pallas kernel (interpret mode) and the quant integer
-path must all agree with both, bit-exactly, across widths and adversarial
-weight patterns.
+batched engine, the device-resident plan (``compile_plan`` + ``run_device``
+and its Pallas forest kernel), the Pallas LUT kernel (interpret mode) and
+the quant integer paths must all agree with both, bit-exactly, across
+widths and adversarial weight patterns — under ``jit`` and ``vmap``, with
+zero ``pure_callback`` in the device path's lowered jaxpr.
 """
 import numpy as np
 import pytest
 
-from repro.core.engine import BatchedTransitiveEngine
+from repro.core.engine import (BatchedTransitiveEngine, ExecutionPlan,
+                               compile_plan, compile_plans, run_device,
+                               run_device_jit)
 from repro.core.transitive_ref import transitive_gemm_ref
 
 
@@ -115,6 +119,195 @@ def test_engine_rejects_bad_shapes(rng):
     plan = eng.plan(rng.integers(-8, 8, size=(4, 16)))
     with pytest.raises(ValueError):
         eng.run(plan, rng.integers(-8, 8, size=(24, 3)))  # wrong K
+
+
+# -- device-resident plans (compile_plan / run_device / Pallas forest) ------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("t", [4, 8])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_device_plan_vs_engine_vs_int64(bits, t, pattern, rng):
+    """engine_jit pyramid rung: run_device == pallas forest == engine ==
+    int64 GEMM across random and adversarial weight patterns."""
+    import jax.numpy as jnp
+    from repro.kernels.transitive_forest import transitive_forest
+    n, k, m = (3, 4 * t, 5) if pattern == "outlier_heavy" else (11, 6 * t, 7)
+    w = _adversarial_weights(pattern, n, k, bits, rng)
+    x = rng.integers(-128, 128, size=(k, m))
+    want = w.astype(np.int64) @ x.astype(np.int64)
+    eng = BatchedTransitiveEngine(bits=bits, t=t)
+    plan = eng.plan(w)
+    dplan = compile_plan(plan)
+    np.testing.assert_array_equal(eng.run(plan, x), want)
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(dplan, jnp.asarray(x))), want)
+    np.testing.assert_array_equal(
+        np.asarray(transitive_forest(dplan, jnp.asarray(x))), want)
+
+
+@pytest.mark.parametrize("n_groups", [2, 4])
+def test_device_plan_grouped(n_groups, rng):
+    """Grouped (G>1) device plans return bit-exact per-group partials."""
+    import jax.numpy as jnp
+    from repro.kernels.transitive_forest import transitive_forest
+    n, g, m = 6, 16, 5
+    w = rng.integers(-8, 8, size=(n, n_groups * g))
+    x = rng.integers(-128, 128, size=(n_groups * g, m))
+    plan = BatchedTransitiveEngine(4, 8).plan(w, groups=n_groups)
+    dplan = compile_plan(plan)
+    want = np.einsum("ngi,gim->ngm",
+                     w.reshape(n, n_groups, g).astype(np.int64),
+                     x.reshape(n_groups, g, m).astype(np.int64))
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(dplan, jnp.asarray(x))), want)
+    np.testing.assert_array_equal(
+        np.asarray(transitive_forest(dplan, jnp.asarray(x))), want)
+
+
+def test_device_plan_under_jit_vmap(rng):
+    """run_device composes with jit + vmap; the jaxpr has no callback."""
+    import jax
+    import jax.numpy as jnp
+    w = rng.integers(-8, 8, size=(9, 32))
+    plan = BatchedTransitiveEngine(4, 8).plan(w)
+    dplan = compile_plan(plan)
+    xb = rng.integers(-128, 128, size=(3, 32, 6))
+    got = np.asarray(jax.jit(jax.vmap(
+        lambda xi: run_device(dplan, xi)))(jnp.asarray(xb)))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            got[i], w.astype(np.int64) @ xb[i].astype(np.int64))
+    jaxpr = str(jax.make_jaxpr(
+        lambda xi: run_device(dplan, xi))(jnp.asarray(xb[0])))
+    assert "pure_callback" not in jaxpr
+
+
+def test_stacked_device_plans_under_scan(rng):
+    """compile_plans stacks same-signature plans; lax.scan slices them —
+    the layout serving uses for scan-stacked block weights."""
+    import jax
+    import jax.numpy as jnp
+    ws = [rng.integers(-8, 8, size=(5, 32)) for _ in range(3)]
+    eng = BatchedTransitiveEngine(4, 8)
+    stacked = compile_plans([eng.plan(wi) for wi in ws])
+    x = jnp.asarray(rng.integers(-128, 128, size=(32, 4)))
+
+    def body(carry, dp):
+        return carry, run_device(dp, x)
+    _, ys = jax.jit(lambda s: jax.lax.scan(body, 0, s))(stacked)
+    for i, wi in enumerate(ws):
+        np.testing.assert_array_equal(
+            np.asarray(ys)[i],
+            wi.astype(np.int64) @ np.asarray(x).astype(np.int64))
+
+
+def test_compile_plans_rejects_mixed_signatures(rng):
+    eng = BatchedTransitiveEngine(4, 8)
+    p1 = eng.plan(rng.integers(-8, 8, size=(5, 32)))
+    p2 = eng.plan(rng.integers(-8, 8, size=(6, 32)))
+    with pytest.raises(ValueError):
+        compile_plans([p1, p2])
+    with pytest.raises(ValueError):
+        compile_plans([])
+
+
+def test_run_device_rejects_bad_shapes(rng):
+    dplan = compile_plan(
+        BatchedTransitiveEngine(4, 8).plan(rng.integers(-8, 8, (4, 16))))
+    import jax.numpy as jnp
+    with pytest.raises(ValueError):
+        run_device(dplan, jnp.zeros((24, 3), jnp.int32))   # wrong K
+
+
+# -- plan persistence (save / load npz) -------------------------------------
+
+@pytest.mark.parametrize("pattern", ["random", "outlier_heavy", "zeros"])
+def test_plan_save_load_roundtrip(pattern, tmp_path, rng):
+    """ExecutionPlan.save/load is bit-exact: every field and the executed
+    output survive the npz round trip (plan persistence across processes)."""
+    w = _adversarial_weights(pattern, 5, 32, 8, rng)
+    eng = BatchedTransitiveEngine(bits=8, t=8)
+    plan = eng.plan(w, groups=2)
+    path = tmp_path / "plan.npz"
+    plan.save(path)
+    plan2 = ExecutionPlan.load(path)
+    for f in ("t", "bits", "n", "k", "groups"):
+        assert getattr(plan, f) == getattr(plan2, f)
+    np.testing.assert_array_equal(plan.rows, plan2.rows)
+    np.testing.assert_array_equal(plan.direct_tile, plan2.direct_tile)
+    np.testing.assert_array_equal(plan.direct_bits, plan2.direct_bits)
+    np.testing.assert_array_equal(plan.signs, plan2.signs)
+    assert len(plan.steps) == len(plan2.steps)
+    for s1, s2 in zip(plan.steps, plan2.steps):
+        for f in ("tile", "node", "prefix", "bit"):
+            np.testing.assert_array_equal(getattr(s1, f), getattr(s2, f))
+    for f in ("counts", "exec_counts", "bridge", "distance", "prefix",
+              "lane", "outlier", "wl_ppe", "wl_ape"):
+        np.testing.assert_array_equal(getattr(plan.si, f),
+                                      getattr(plan2.si, f))
+    x = rng.integers(-128, 128, size=(32, 6))
+    np.testing.assert_array_equal(eng.run(plan, x), eng.run(plan2, x))
+    # the loaded plan lowers to an identical device plan
+    import jax.numpy as jnp
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(compile_plan(plan2), jnp.asarray(x))),
+        eng.run(plan, x))
+
+
+# -- quant path: engine_jit / engine_pallas ---------------------------------
+
+@pytest.mark.parametrize("group", [0, 64])
+@pytest.mark.parametrize("path", ["engine_jit", "engine_pallas"])
+def test_engine_jit_quant_path_matches_int_dot(group, path):
+    """linear_apply device paths are bit-exact with int_dot, eager and
+    under jit + vmap (compared jit-to-jit: the float epilogue may fuse
+    differently between jitted and eager graphs)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group, path=path)
+    p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(linear_apply(p, x, cfg)),
+        np.asarray(linear_apply(p, x, cfg.with_(path="int_dot"))))
+
+    def f(pp):
+        return jax.jit(jax.vmap(
+            lambda xi: linear_apply(p, xi, cfg.with_(path=pp))))(x)
+    np.testing.assert_array_equal(np.asarray(f(path)),
+                                  np.asarray(f("int_dot")))
+
+
+def test_engine_jit_jaxpr_has_no_pure_callback():
+    """The acceptance smoke: engine_jit lowers callback-free; the host
+    engine path (the retired hot path) still lowers *with* one."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
+                      path="engine_jit")
+    p = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
+    assert "pure_callback" not in str(
+        jax.make_jaxpr(lambda xi: linear_apply(p, xi, cfg))(x))
+    assert "pure_callback" in str(
+        jax.make_jaxpr(
+            lambda xi: linear_apply(p, xi, cfg.with_(path="engine")))(x))
+
+
+def test_engine_jit_traced_weights_need_attached_plan():
+    """Without an embedded plan, a traced weight is a loud error — not a
+    silent fallback to a callback."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0,
+                      path="engine_jit")
+    p = linear_init(jax.random.PRNGKey(0), 32, 8, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32), jnp.float32)
+    with pytest.raises(ValueError, match="attach"):
+        jax.jit(lambda pp, xi: linear_apply(pp, xi, cfg))(p, x)
 
 
 # -- kernels/ops.py padding paths (non-divisible M/N/K) ---------------------

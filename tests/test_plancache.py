@@ -81,6 +81,20 @@ def test_fingerprint_covers_shape_and_dtype(rng):
     assert weight_fingerprint(w) != weight_fingerprint(w.reshape(8, 8))
 
 
+def test_same_values_any_dtype_one_entry(rng):
+    """The cache canonicalises dtype before fingerprinting: int8 callback
+    views and int64 precompile walks of the same weight share one plan."""
+    c = PlanCache()
+    w = _w(rng, bits=8)
+    p64 = c.get_or_build(w.astype(np.int64), 8, 8)
+    p8 = c.get_or_build(w.astype(np.int8), 8, 8)
+    assert p64 is p8
+    assert c.stats()["misses"] == 1 and c.stats()["hits"] == 1
+    assert c.invalidate(w.astype(np.int16)) == 1     # any dtype, same bytes
+    with pytest.raises(ValueError):                   # wrap guard is loud
+        c.get_or_build(np.full((2, 8), 1000), 8, 8)
+
+
 def test_clear_and_reset(rng):
     c = PlanCache()
     c.get_or_build(_w(rng), 4, 8)
@@ -214,6 +228,156 @@ def test_model_precompile_plans_end_to_end(cache):
     s = cache.stats()
     assert s["misses"] == misses, "decode re-planned a weight"
     assert s["hits"] > 0
+
+
+# -- version-tag fast keys --------------------------------------------------
+
+def test_version_tag_skips_content_hashing(rng, monkeypatch):
+    """Version-keyed lookups never hash the weight bytes after the initial
+    build (the ROADMAP fast-key item); content-keyed lookups hash every
+    call."""
+    import repro.core.plancache as PC
+    calls = {"n": 0}
+    real = PC.weight_fingerprint
+
+    def counting(qw):
+        calls["n"] += 1
+        return real(qw)
+    monkeypatch.setattr(PC, "weight_fingerprint", counting)
+
+    c = PlanCache()
+    w = _w(rng)
+    c.get_or_build(w, 4, 8, version=("layer0", 0))   # build: hashes once
+    assert calls["n"] == 1
+    for _ in range(5):
+        c.get_or_build(w, 4, 8, version=("layer0", 0))
+    assert calls["n"] == 1                           # hits: zero hashing
+    assert c.stats()["hits"] == 5 and c.stats()["misses"] == 1
+    c.get_or_build(w, 4, 8)                          # content key: hashes
+    assert calls["n"] == 2
+
+
+def test_version_tag_distinct_tags_distinct_plans(rng):
+    c = PlanCache()
+    w = _w(rng)
+    p0 = c.get_or_build(w, 4, 8, version=("l", 0))
+    p1 = c.get_or_build(w, 4, 8, version=("l", 1))  # new tag -> new entry
+    assert p0 is not p1 and c.stats()["misses"] == 2
+
+
+def test_invalidate_finds_version_keyed_entries(rng):
+    """invalidate stays content-based: it drops version-keyed entries of
+    the same weight bytes too (the fingerprint is stored at build time)."""
+    c = PlanCache()
+    w = _w(rng)
+    c.get_or_build(w, 4, 8, version=("l", 0))
+    c.get_or_build(w, 4, 8)                          # content-keyed twin
+    c.get_or_build(_w(rng), 4, 8, version=("m", 0))  # different weight
+    assert c.invalidate(w) == 2
+    assert len(c) == 1 and c.stats()["invalidations"] == 2
+
+
+def test_invalidate_version_covers_in_place_weight_update(rng):
+    """A reused tag over updated bytes would serve the stale plan; the
+    update flow is invalidate_version (old bytes gone) or a bumped tag."""
+    c = PlanCache()
+    w_old = _w(rng)
+    stale = c.get_or_build(w_old, 4, 8, version="layer0")
+    w_new = w_old.copy()
+    w_new[0, 0] ^= 1
+    # content invalidation with the NEW bytes cannot find the old entry
+    assert c.invalidate(w_new) == 0
+    assert c.get_or_build(w_new, 4, 8, version="layer0") is stale
+    # ... invalidate_version can
+    assert c.invalidate_version("layer0") == 1
+    fresh = c.get_or_build(w_new, 4, 8, version="layer0")
+    assert fresh is not stale and c.stats()["misses"] == 2
+    # a bumped tag (the step-counter scheme) never sees the stale entry
+    assert c.get_or_build(w_new, 4, 8, version=("layer0", 1)) is not stale
+
+
+# -- device plans through the cache -----------------------------------------
+
+def test_get_or_build_device_memoised(rng):
+    """The DevicePlan is compiled once and the same pytree returned (so
+    jit caches keyed on leaf identity/shape stay warm)."""
+    import jax.numpy as jnp
+    from repro.core.engine import run_device_jit
+    c = PlanCache()
+    w = _w(rng, n=6, k=32, bits=4)
+    d1 = c.get_or_build_device(w, 4, 8)
+    d2 = c.get_or_build_device(w, 4, 8)
+    assert d1 is d2
+    assert c.stats()["misses"] == 1 and c.stats()["hits"] == 1
+    x = rng.integers(-128, 128, (32, 3))
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(d1, jnp.asarray(x))),
+        w.astype(np.int64) @ x.astype(np.int64))
+    # host plan lookups share the same entry
+    assert c.get_or_build(w, 4, 8) is not None
+    assert c.stats()["misses"] == 1
+
+
+def test_attach_device_plans_stacked_and_flat(cache):
+    """attach_device_plans embeds a dplan per PTQ layer dict, stacking
+    plans of vmap-stacked weights along the same leading axis."""
+    import jax
+    from repro.core.plancache import attach_device_plans
+    from repro.quant import QuantConfig, linear_init
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
+                      path="engine_jit")
+    flat = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
+    stacked = jax.vmap(lambda k: linear_init(k, 128, 16, cfg))(
+        jax.random.split(jax.random.PRNGKey(1), 3))
+    params = {"blocks": {"b0": stacked}, "head": flat}
+    out = attach_device_plans(params, cfg, cache=cache)
+    assert out["head"]["dplan"].level_src.ndim == 2
+    assert out["blocks"]["b0"]["dplan"].level_src.shape[0] == 3
+    assert out["blocks"]["b0"]["dplan"].groups == 2
+    # the original params are untouched; plans were built through the cache
+    assert "dplan" not in params["head"]
+    assert cache.stats()["misses"] == 4
+
+
+def test_model_attach_device_plans_end_to_end(cache):
+    """engine_jit serving: plans attached to the params ride the block
+    scan; prefill + decode are bit-exact with int_dot and lower with zero
+    pure_callback."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+
+    cfg = serve_config(get_reduced("smollm-135m"), w_bits=4,
+                       path="engine_jit")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stats = model.precompile_plans(params)
+    assert stats["built"] == stats["plans"] > 0
+    params_d = model.attach_device_plans(params)
+    assert cache.stats()["misses"] == stats["built"]   # attach re-used them
+
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                                          cfg.vocab, jnp.int32)}
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, 8))
+    logits, caches = prefill(params_d, batch)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits2, _ = jax.jit(model.decode_step)(params_d, caches, tok,
+                                            jnp.int32(4))
+    jax.block_until_ready(logits2)
+    assert cache.stats()["misses"] == stats["built"], "decode re-planned"
+
+    # bit-exact with the int_dot reference model on the same params
+    cfg_i = serve_config(get_reduced("smollm-135m"), w_bits=4,
+                         path="int_dot")
+    logits_i, _ = jax.jit(lambda p, b: Model(cfg_i).prefill(p, b, 8))(
+        params, batch)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_i))
+
+    jaxpr = str(jax.make_jaxpr(lambda p, b: model.prefill(p, b, 8))(
+        params_d, batch))
+    assert "pure_callback" not in jaxpr
 
 
 def test_default_cache_swap_restores():
