@@ -11,13 +11,18 @@ TPU-side memory win).
 exercising every code path end-to-end. ``--serve-bench`` switches to the
 cached-vs-uncached serving comparison (plan built per call vs plan from
 core/plancache.py) and writes ``BENCH_engine.json``; the kernel microbench
-is then skipped (CI runs the two as separate steps).
+is then skipped (CI runs the two as separate steps). The serving bench
+enumerates the **backend registry** (core/backend.py) — one keyed entry
+per backend under ``"backends"`` in the JSON (e.g.
+``engine_jit.device_decode_us``) — so the perf trajectory distinguishes
+backends instead of overwriting one flat dict.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import warnings
 
 import numpy as np
 import jax
@@ -105,29 +110,40 @@ def run(smoke: bool = False):
 
 
 def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
-                path: str = "engine_jit"):
-    """Cached vs uncached serving: L layer weights x D decode steps.
+                backends=None):
+    """Cached vs uncached serving + a per-backend decode series.
 
-    *uncached* is the pre-plan-cache serving behaviour (every forward call
-    re-plans the weight inside the callback); *cached* is the shipped
-    host-engine path: plans built once offline via PlanCache, decode
-    run-only. With ``path="engine_jit"`` (the default) a third series runs
-    the same plans **device-resident** (DevicePlan + jit'd run_device, no
-    host numpy, no callback) and the JSON gains ``device_decode_us`` /
-    ``per_call_device_us``. Emits the split to stdout and writes ``out``
-    for the CI perf trajectory."""
+    The headline pair stays what it was: *uncached* is the
+    pre-plan-cache serving behaviour (every forward call re-plans the
+    weight), *cached* is the plan-cached host engine (plans built once
+    offline via PlanCache, decode run-only). Then every registered
+    backend (``repro.core.backend`` — or the ``backends`` subset) decodes
+    the same weights through its own ``execute`` path under jit, plans
+    and DevicePlans prepared offline, and the JSON gains one keyed entry
+    per backend under ``"backends"`` — ``engine_jit.device_decode_us``
+    next to ``engine.callback_decode_us`` next to ``int_dot.decode_us`` —
+    so the CI perf trajectory distinguishes backends instead of
+    overwriting one flat dict. Every series is guarded bit-exact against
+    the int64 GEMM before its numbers are emitted."""
+    from repro.core.backend import EngineConfig, get_backend, list_backends
+    import repro.core.plancache as PC
     from repro.core.plancache import PlanCache
 
+    names = list(backends) if backends else [
+        nm for nm in list_backends() if get_backend(nm).cpu_ok]
     layers, steps = (4, 8) if smoke else (8, 32)
     n = k = 64 if smoke else 256
     m = 4                                    # decode-like tall-skinny GEMM
+    ecfg = EngineConfig(w_bits=8, t=8, groups=1)
     rng = np.random.default_rng(2)
     # int8 like the serving path (the cache canonicalises dtype before
-    # fingerprinting, so all four series share one entry per weight
-    # either way; the misses guard below would catch a regression)
+    # fingerprinting, so every series shares one entry per weight either
+    # way; the misses guard below would catch a regression)
     ws = [synth_weights(n, k, 8, seed=s).astype(np.int8)
           for s in range(layers)]
     xs = [rng.integers(-128, 128, (k, m)) for _ in range(steps)]
+    wants0 = [xs[0].T.astype(np.int64) @ w.astype(np.int64).T
+              for w in ws]                   # (M, N) int64 guard truth
     eng = BatchedTransitiveEngine(bits=8, t=8)
 
     t0 = time.perf_counter()
@@ -139,12 +155,12 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
     cache = PlanCache(capacity=2 * layers)
     t0 = time.perf_counter()
     for w in ws:                             # offline precompile
-        cache.get_or_build(w, 8, 8)
+        cache.get_or_build(w, ecfg)
     us_plan = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for x in xs:
         for w in ws:                         # hot path: run-only
-            cache.run(w, x, 8, 8)
+            cache.run(w, x, ecfg)
     us_cached = (time.perf_counter() - t0) * 1e6
 
     stats = cache.stats()
@@ -164,84 +180,93 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
         "per_call_uncached_us": us_uncached / calls,
         "per_call_cached_us": us_cached / calls,
         "speedup_cached": us_uncached / us_cached,
-        "cache": stats,
+        "backends": {},
     }
 
-    if path == "engine_jit":
-        # (1) the shipped jit hot path being replaced: qlinear's
-        # pure_callback into the plan cache — per-call it pays the
-        # callback round trip + content hash on top of the numpy run
-        from repro.core import engine as E
-        from repro.core import plancache as PC
-        from repro.quant.qlinear import _engine_matmul
-        prev = PC.set_default_cache(cache)
-        try:
-            qxs = [jnp.asarray(x.T, jnp.int8) for x in xs]
-            qws = [jnp.asarray(w, jnp.int8) for w in ws]
-            fns = [jax.jit(lambda a, qw=qw: _engine_matmul(a, qw, 8, 8))
-                   for qw in qws]
-            for f in fns:
-                jax.block_until_ready(f(qxs[0]))
+    # per-backend decode series: same weights, each backend's own execute
+    # path under jit. The engine host callbacks resolve plans from our warm
+    # cache (swapped in as the process default for the duration).
+    prev = PC.set_default_cache(cache)
+    try:
+        xs_row = [jnp.asarray(x.T, jnp.int8) for x in xs]      # (M, K)
+        qws = [jnp.asarray(w, jnp.int8) for w in ws]
+        for name in names:
+            b = get_backend(name)
+            entry: dict[str, float] = {}
+            plans = [None] * layers
+            dplans = [None] * layers
+            if b.needs_plan:
+                plans = [cache.get_or_build(w, ecfg, backend=name)
+                         for w in ws]        # warm: all hits
+            if b.needs_plan and b.device_resident:
+                t0 = time.perf_counter()
+                dplans = [cache.get_or_build_device(w, ecfg, backend=name)
+                          for w in ws]
+                entry["device_plan_compile_us"] = \
+                    (time.perf_counter() - t0) * 1e6
+            fns = [jax.jit(lambda a, _b=b, _w=qws[i], _p=plans[i],
+                           _d=dplans[i]: _b.execute(a, _w, _p, _d, ecfg))
+                   for i in range(layers)]
+            # bit-exact guard before timing: int32 ≡ int64 mod 2^32 (smoke
+            # magnitudes don't overflow) — a wrong number here would make
+            # the emitted series meaningless
+            for i, f in enumerate(fns):
+                np.testing.assert_array_equal(
+                    np.asarray(f(xs_row[0])), wants0[i])
             t0 = time.perf_counter()
-            for qx in qxs:
+            for qx in xs_row:
                 for f in fns:
                     jax.block_until_ready(f(qx))
-            us_callback = (time.perf_counter() - t0) * 1e6
-        finally:
-            PC.set_default_cache(prev)
+            us_decode = (time.perf_counter() - t0) * 1e6
+            decode_key = ("device_decode_us" if b.device_resident
+                          and b.needs_plan else
+                          "callback_decode_us" if b.needs_plan else
+                          "decode_us")
+            entry[decode_key] = us_decode
+            entry["per_call_us"] = us_decode / calls
+            result["backends"][name] = entry
+    finally:
+        PC.set_default_cache(prev)
 
-        # (2) device-resident series: same cached plans, lowered to
-        # DevicePlan and executed as pure jit'd JAX — zero host callbacks.
-        # Compile+warmup amortise like plan-build.
-        t0 = time.perf_counter()
-        dplans = [cache.get_or_build_device(w, 8, 8) for w in ws]
-        xs_dev = [jnp.asarray(x) for x in xs]
-        for dp in dplans:                    # trace + compile, per shape
-            jax.block_until_ready(E.run_device_jit(dp, xs_dev[0]))
-        us_compile = (time.perf_counter() - t0) * 1e6
-        t0 = time.perf_counter()
-        for x in xs_dev:
-            for dp in dplans:
-                jax.block_until_ready(E.run_device_jit(dp, x))
-        us_device = (time.perf_counter() - t0) * 1e6
-        # bit-exactness vs the host engine (int32 ≡ int64 mod 2^32; smoke
-        # magnitudes don't overflow) — a wrong number here would make the
-        # emitted series meaningless
-        got = np.asarray(E.run_device_jit(dplans[0], xs_dev[0]))
-        want = cache.run(ws[0], xs[0], 8, 8)
-        np.testing.assert_array_equal(got, want)
-        # the callback and device series must have run against the plans
-        # built above — any new miss means a fingerprint diverged (e.g. a
-        # dtype change) and the comparison is meaningless
-        if cache.stats()["misses"] != layers:
-            raise RuntimeError(
-                f"device/callback series re-planned: {cache.stats()} "
-                f"(expected misses={layers})")
-        result.update({
-            "callback_decode_us": us_callback,
-            "per_call_callback_us": us_callback / calls,
-            "device_plan_compile_us": us_compile,
-            "device_decode_us": us_device,
-            "per_call_device_us": us_device / calls,
-            "speedup_device_vs_cached": us_cached / us_device,
-            "speedup_device_vs_callback": us_callback / us_device,
-        })
+    # every series must have run against the plans built above — any new
+    # miss means a fingerprint diverged and the comparison is meaningless
+    if cache.stats()["misses"] != layers:
+        raise RuntimeError(
+            f"a backend series re-planned: {cache.stats()} "
+            f"(expected misses={layers})")
+    result["cache"] = cache.stats()
+
+    # legacy flat aliases for the PR-2/PR-3 trajectory keys
+    eng_e = result["backends"].get("engine", {})
+    eng_j = result["backends"].get("engine_jit", {})
+    if "callback_decode_us" in eng_e:
+        result["callback_decode_us"] = eng_e["callback_decode_us"]
+        result["per_call_callback_us"] = eng_e["per_call_us"]
+    if "device_decode_us" in eng_j:
+        result["device_plan_compile_us"] = eng_j["device_plan_compile_us"]
+        result["device_decode_us"] = eng_j["device_decode_us"]
+        result["per_call_device_us"] = eng_j["per_call_us"]
+        result["speedup_device_vs_cached"] = \
+            us_cached / eng_j["device_decode_us"]
+        if "callback_decode_us" in eng_e:
+            result["speedup_device_vs_callback"] = \
+                eng_e["callback_decode_us"] / eng_j["device_decode_us"]
 
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
-    dev = (f" device_decode={result['device_decode_us']:.0f}us "
-           f"(x{result['speedup_device_vs_callback']:.1f} vs callback, "
-           f"x{result['speedup_device_vs_cached']:.1f} vs host run)"
-           if "device_decode_us" in result else "")
+    per_backend = " ".join(
+        f"{nm}={e.get('device_decode_us', e.get('callback_decode_us', e.get('decode_us', 0.0))):.0f}us"
+        for nm, e in result["backends"].items())
     emit("serve_plan_cache", us_cached,
          f"{layers} layers x {steps} steps {n}x{k}x{m}: "
          f"uncached={us_uncached:.0f}us plan_once={us_plan:.0f}us "
          f"cached_decode={us_cached:.0f}us "
-         f"speedup=x{result['speedup_cached']:.1f}{dev} "
+         f"speedup=x{result['speedup_cached']:.1f} | {per_backend} "
          f"(misses={stats['misses']} hits={stats['hits']}) -> {out}")
 
 
 if __name__ == "__main__":
+    from repro.core.backend import list_backends
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (seconds, not minutes)")
@@ -250,13 +275,22 @@ if __name__ == "__main__":
                     "(the kernel microbench is its own invocation)")
     ap.add_argument("--json", default="BENCH_engine.json",
                     help="output path for the serving-bench JSON")
-    ap.add_argument("--path", default="engine_jit",
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated registry backend names for the "
+                    "serve-bench decode series (default: every CPU-capable "
+                    f"registered backend: {','.join(list_backends())})")
+    ap.add_argument("--path", default=None,
                     choices=("engine", "engine_jit"),
-                    help="serve-bench decode series: 'engine' = host plan "
-                    "cache only, 'engine_jit' (default) adds the "
-                    "device-resident decode series")
+                    help="DEPRECATED alias: 'engine' = host series only, "
+                    "'engine_jit' = host + device series (use --backends)")
     args = ap.parse_args()
+    backends = args.backends.split(",") if args.backends else None
+    if args.path is not None and backends is None:
+        warnings.warn("--path is deprecated; use --backends",
+                      DeprecationWarning)
+        backends = (["engine"] if args.path == "engine"
+                    else ["engine", "engine_jit"])
     if args.serve_bench:
-        serve_bench(smoke=args.smoke, out=args.json, path=args.path)
+        serve_bench(smoke=args.smoke, out=args.json, backends=backends)
     else:
         run(smoke=args.smoke)

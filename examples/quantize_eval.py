@@ -56,6 +56,6 @@ for bits in (8, 4):
     m_q = Model(qcfg)
     p_int = ppl(m_q, qp)
     p_lut = math.exp(float(Model(qcfg.replace(
-        quant=qcfg.quant.with_(path="lut"))).loss(qp, batch)))
+        quant=qcfg.quant.with_(backend="lut"))).loss(qp, batch)))
     print(f"PPL W{bits}A8 : {p_int:8.3f}   (transitive LUT path: {p_lut:8.3f}"
           f" — identical => lossless)")

@@ -35,7 +35,7 @@ from repro.quant import QuantConfig, linear_init, linear_apply
 cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=128)
 p = linear_init(jax.random.PRNGKey(2), 256, 128, cfg)
 x = jax.random.normal(jax.random.PRNGKey(3), (8, 256))
-y_dot = linear_apply(p, x, cfg.with_(path="int_dot"))
-y_lut = linear_apply(p, x, cfg.with_(path="lut"))
+y_dot = linear_apply(p, x, cfg.with_(backend="int_dot"))
+y_lut = linear_apply(p, x, cfg.with_(backend="lut"))
 np.testing.assert_allclose(np.asarray(y_dot), np.asarray(y_lut), rtol=1e-5)
 print("TransitiveLinear int-dot == LUT path ✓ (lossless, Sec. 2.1)")

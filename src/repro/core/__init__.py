@@ -6,10 +6,12 @@ Modules:
   scoreboard — faithful Alg.1/Alg.2 + balanced forest (static & dynamic SI)
   transitive — lossless transitive GEMM execution (bit-exact oracle)
   engine     — batched multi-tile plan/run engine (offline/online split)
+  backend    — pluggable execution-backend registry (capabilities + plan/
+               compile/execute lifecycle; replaces string-path dispatch)
   plancache  — LRU ExecutionPlan cache + precompile (serving amortisation)
   patterns   — ZR/TR/FR/PR classification, density & cycle statistics
   costmodel  — Transitive Array cycle/energy model (Tbl. 1/2 config)
   baselines  — BitFusion / ANT / Olive / Tender / BitVert analytic models
 """
-from repro.core import (bitslice, engine, hasse, patterns,  # noqa: F401
-                        plancache, scoreboard, transitive)
+from repro.core import (backend, bitslice, engine, hasse,  # noqa: F401
+                        patterns, plancache, scoreboard, transitive)

@@ -48,8 +48,16 @@ from repro.core.scoreboard import (MAX_DISTANCE, ScoreboardInfo,
                                    dynamic_scoreboard)
 
 __all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep",
-           "DevicePlan", "compile_plan", "compile_plans", "forest_body",
+           "DevicePlan", "PlanBundle", "DEVICE_DATA_FIELDS",
+           "compile_plan", "compile_plans", "forest_body",
            "run_device", "run_device_jit"]
+
+
+# DevicePlan's array leaves, in one place: the pytree registration, the
+# sharding hook (core/backend.py shard_device_plan) and the persistence
+# bundle all agree on this list by construction.
+DEVICE_DATA_FIELDS = ("level_src", "level_xsrc", "direct_idx",
+                      "direct_x_idx", "direct_bits", "gather_idx", "signs")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,17 +90,37 @@ class ExecutionPlan:
         return self.k // self.t
 
     # -- persistence (npz) ------------------------------------------------
-    def save(self, path) -> None:
+    def save(self, path, *, device=None, backend: str | None = None) -> None:
         """Serialize the full plan (schedule + scoreboard) to an ``.npz``.
 
         Everything is plain numpy, so a plan precompiled in one process can
         be loaded in another (or shipped to a serving fleet) without paying
         the scoreboard build again; :func:`ExecutionPlan.load` round-trips
-        bit-exactly (tests/test_engine.py)."""
+        bit-exactly (tests/test_engine.py).
+
+        With ``device=`` a compiled :class:`DevicePlan` (possibly stacked
+        along leading axes) rides in the same file, tagged with the
+        ``backend`` registry name that lowered it — so a cached lowering
+        also round-trips across processes (:meth:`load_bundle`) instead of
+        being re-done per process."""
+        extra = {}
+        if backend is not None and device is None:
+            raise ValueError(
+                "backend= tags the persisted device lowering; pass "
+                "device= as well (a backend tag alone would be dropped "
+                "silently on load)")
+        if device is not None:
+            extra["device_meta"] = np.array(
+                [device.t, device.bits, device.n, device.k, device.groups],
+                np.int64)
+            extra["device_backend"] = np.array(backend or "")
+            for f in DEVICE_DATA_FIELDS:
+                extra[f"device_{f}"] = np.asarray(getattr(device, f))
         cat = (np.concatenate if self.steps else
                lambda _: np.zeros(0, np.int64))
         np.savez(
             path,
+            **extra,
             meta=np.array([self.t, self.bits, self.n, self.k, self.groups,
                            self.si.t, self.si.n_rows], np.int64),
             rows=self.rows,
@@ -112,7 +140,11 @@ class ExecutionPlan:
     @staticmethod
     def load(path) -> "ExecutionPlan":
         """Inverse of :meth:`save` — bit-exact reconstruction."""
-        z = np.load(path)
+        with np.load(path) as z:
+            return ExecutionPlan._from_npz(z)
+
+    @staticmethod
+    def _from_npz(z) -> "ExecutionPlan":
         t, bits, n, k, groups, si_t, si_n_rows = (int(v) for v in z["meta"])
         lens = z["steps_len"]
         bounds = np.cumsum(lens)[:-1]
@@ -132,6 +164,23 @@ class ExecutionPlan:
                              direct_node=z["direct_node"],
                              direct_bits=z["direct_bits"],
                              signs=z["signs"], groups=groups)
+
+    @staticmethod
+    def load_bundle(path) -> "PlanBundle":
+        """Load a plan plus — when the file carries one — its persisted
+        device lowering and the backend registry name that produced it.
+        Files written without ``device=`` load with ``device=None``."""
+        with np.load(path) as z:
+            plan = ExecutionPlan._from_npz(z)
+            if "device_meta" not in z.files:
+                return PlanBundle(plan=plan, device=None, backend=None)
+            t, bits, n, k, groups = (int(v) for v in z["device_meta"])
+            device = DevicePlan(   # jnp comes from the module tail import
+                t=t, bits=bits, n=n, k=k, groups=groups,
+                **{f: jnp.asarray(z[f"device_{f}"])
+                   for f in DEVICE_DATA_FIELDS})
+            backend = str(z["device_backend"]) or None
+        return PlanBundle(plan=plan, device=device, backend=backend)
 
 
 class BatchedTransitiveEngine:
@@ -312,9 +361,18 @@ class DevicePlan:
 
 jax.tree_util.register_dataclass(
     DevicePlan,
-    data_fields=["level_src", "level_xsrc", "direct_idx", "direct_x_idx",
-                 "direct_bits", "gather_idx", "signs"],
+    data_fields=list(DEVICE_DATA_FIELDS),
     meta_fields=["t", "bits", "n", "k", "groups"])
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanBundle:
+    """What :meth:`ExecutionPlan.load_bundle` returns: the host plan, and —
+    when the file persisted one — its device lowering plus the backend
+    registry name that produced it."""
+    plan: ExecutionPlan
+    device: DevicePlan | None
+    backend: str | None
 
 
 def compile_plan(plan: ExecutionPlan, *,

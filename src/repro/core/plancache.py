@@ -6,25 +6,31 @@ the offline half runs **once per weight**, not once per forward call. This
 module is that amortisation, as a first-class subsystem:
 
   * :class:`PlanCache` — an LRU-bounded map from
-    ``(weight fingerprint, w_bits, T, groups)`` to a ready
+    ``(weight fingerprint, EngineConfig)`` to a ready
     :class:`~repro.core.engine.ExecutionPlan`, with hit / miss / eviction /
     invalidation counters so serving can *prove* each plan was built exactly
     once (misses == distinct quantized weights, hits == remaining calls).
-  * a process-level default cache that the jit-side host callbacks in
-    ``quant/qlinear.py`` consult on every engine forward — the hot path only
-    ever executes ``run(plan, x)``.
+    Counters carry a **backend dimension**: lookups tagged with a registry
+    backend name (core/backend.py) are attributed per backend in
+    ``stats()["backends"]``, so a serve report can say which backend's hot
+    path the hits came from.
+  * a process-level default cache that the jit-side host callbacks of the
+    ``engine`` backend consult on every forward — the hot path only ever
+    executes ``run(plan, x)``.
   * :func:`precompile` — an offline pass that walks a model's params pytree
     (including vmap-stacked leading axes from scanned super-blocks) and
     builds every PTQ layer's plan up front, so the first decoded token pays
     zero plan-build cost.
 
-Weights are fingerprinted by content (blake2b over shape/dtype/bytes), so a
-weight *update* naturally misses — and :meth:`PlanCache.invalidate` drops
-the stale entry explicitly so updated-weight serving does not leak plans
-until LRU pressure finds them. Content keys make correctness unconditional
-(no way to serve a stale plan) at the cost of hashing the int8 weight bytes
-per lookup. Callers that manage their own weight identity (a layer id plus
-a step counter, say) can pass ``version=`` instead: the tag becomes the
+Lookups take an :class:`~repro.core.backend.EngineConfig` (the loose
+``(w_bits, t, groups)`` ints are still accepted as a legacy form). Weights
+are fingerprinted by content (blake2b over shape/dtype/bytes), so a weight
+*update* naturally misses — and :meth:`PlanCache.invalidate` drops the
+stale entry explicitly so updated-weight serving does not leak plans until
+LRU pressure finds them. Content keys make correctness unconditional (no
+way to serve a stale plan) at the cost of hashing the int8 weight bytes per
+lookup. Callers that manage their own weight identity (a layer id plus a
+step counter, say) can pass ``version=`` instead: the tag becomes the
 lookup key and the bytes are only hashed once, at build time, so
 :meth:`invalidate` stays content-based and can still find version-keyed
 entries when the weight updates.
@@ -32,11 +38,13 @@ entries when the weight updates.
 Two plan representations live behind the same keys: the host-numpy
 :class:`~repro.core.engine.ExecutionPlan` (built once per weight) and the
 device-resident :class:`~repro.core.engine.DevicePlan` it lowers to
-(:meth:`get_or_build_device`, compiled lazily from the cached host plan).
+(:meth:`get_or_build_device`, compiled lazily from the cached host plan
+through the requesting backend's ``compile`` hook).
 :func:`attach_device_plans` embeds compiled plans *into a params pytree* —
-stacked along any vmap/scan leading axes — which is how the pure-JAX
-``path="engine_jit"`` serving hot path (quant/qlinear.py) sees plans for
-weights that are tracers inside the model's block scan.
+stacked along any vmap/scan leading axes, optionally placed on a mesh with
+``PartitionSpec``s — which is how the pure-JAX device backends
+(quant/qlinear.py) see plans for weights that are tracers inside the
+model's block scan.
 """
 from __future__ import annotations
 
@@ -48,8 +56,10 @@ from typing import Any, Hashable, Iterator
 
 import numpy as np
 
+from repro.core.backend import (EngineConfig, TransitiveBackend,
+                                get_backend, shard_device_plan)
 from repro.core.engine import (BatchedTransitiveEngine, DevicePlan,
-                               ExecutionPlan, compile_plan, compile_plans)
+                               ExecutionPlan)
 
 __all__ = ["PlanCache", "weight_fingerprint", "default_cache",
            "set_default_cache", "precompile", "attach_device_plans"]
@@ -60,10 +70,16 @@ PlanKey = tuple
 
 @dataclasses.dataclass
 class _Entry:
-    """One cached weight: host plan + content hash + lazy device lowering."""
+    """One cached weight: host plan + content hash + lazy device lowerings.
+
+    ``device`` is keyed by the *compile-hook implementation* (the unbound
+    function) that produced the lowering: backends sharing one hook (the
+    built-in engine_jit / engine_pallas pair) share one memoised pytree,
+    while a custom backend overriding ``compile`` with its own layout is
+    never served another backend's arrays."""
     plan: ExecutionPlan
     fingerprint: str
-    device: DevicePlan | None = None
+    device: dict[Any, Any] = dataclasses.field(default_factory=dict)
 
 
 def weight_fingerprint(qw: np.ndarray) -> str:
@@ -100,6 +116,26 @@ def _canonical(qw: np.ndarray) -> np.ndarray:
     return qw
 
 
+def _coerce_cfg(cfg, t, groups) -> EngineConfig:
+    """One EngineConfig from either the dataclass or the legacy ints."""
+    if isinstance(cfg, EngineConfig):
+        if t is not None or groups != 1:
+            raise TypeError("pass either an EngineConfig (which carries t "
+                            "and groups) or the legacy (w_bits, t, groups) "
+                            "ints, not both")
+        return cfg
+    if t is None:
+        raise TypeError("legacy int form needs t: (qw, w_bits, t, groups)")
+    return EngineConfig(w_bits=int(cfg), t=int(t), groups=int(groups))
+
+
+def _backend_tag(backend) -> str | None:
+    """Normalise a counter tag: registry name, backend object, or None."""
+    if backend is None:
+        return None
+    return backend if isinstance(backend, str) else backend.name
+
+
 class PlanCache:
     """LRU cache of weight-only execution plans.
 
@@ -119,15 +155,27 @@ class PlanCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        # per-backend attribution of hits/misses (keyed by registry name);
+        # untagged lookups only move the global counters
+        self._backend_stats: dict[str, dict[str, int]] = {}
+
+    def _count(self, backend: str | None, field: str) -> None:
+        """Caller holds the lock. Bumps global + per-backend counters."""
+        setattr(self, field, getattr(self, field) + 1)
+        if backend is not None:
+            per = self._backend_stats.setdefault(
+                backend, {"hits": 0, "misses": 0})
+            per[field] += 1
 
     # -- lookup / build ---------------------------------------------------
-    def _entry(self, qw: np.ndarray, w_bits: int, t: int, groups: int,
-               version: Hashable | None) -> _Entry:
+    def _entry(self, qw: np.ndarray, cfg: EngineConfig,
+               version: Hashable | None,
+               backend: str | None = None) -> _Entry:
         """Shared lookup/build path; counts one hit or one miss."""
         qw = np.asarray(qw)
         if qw.ndim != 2:
             raise ValueError(f"qw must be 2-D (N, K), got {qw.shape}")
-        sig = (int(w_bits), int(t), int(groups))
+        sig = cfg.key()
         with self._lock:
             fp = None
             if version is not None:
@@ -140,14 +188,14 @@ class PlanCache:
                 key = ("fp", fp) + sig
             entry = self._plans.get(key)
             if entry is not None:
-                self.hits += 1
+                self._count(backend, "hits")
                 self._plans.move_to_end(key)
                 return entry
             if version is not None:
                 qw = _canonical(qw)        # build path only
-            self.misses += 1
-            plan = BatchedTransitiveEngine(bits=w_bits, t=t).plan(
-                qw.astype(np.int64, copy=False), groups=groups)
+            self._count(backend, "misses")
+            plan = BatchedTransitiveEngine(bits=cfg.w_bits, t=cfg.t).plan(
+                qw.astype(np.int64, copy=False), groups=cfg.groups)
             # content hash stored regardless of key scheme: invalidate()
             # finds version-keyed entries by weight content too
             entry = _Entry(plan=plan,
@@ -158,19 +206,24 @@ class PlanCache:
                 self.evictions += 1
             return entry
 
-    def get_or_build(self, qw: np.ndarray, w_bits: int, t: int,
-                     groups: int = 1, *,
-                     version: Hashable | None = None) -> ExecutionPlan:
+    def get_or_build(self, qw: np.ndarray, cfg, t: int | None = None,
+                     groups: int = 1, *, version: Hashable | None = None,
+                     backend=None) -> ExecutionPlan:
         """Return the cached plan for ``qw`` (N, K), building it on miss.
 
-        ``qw`` is the full 2-D integer weight with all quantization groups
-        concatenated along K; grouped layers pass ``groups=G`` and get one
-        batched plan covering every group. With ``version=`` the caller's
-        tag (layer id + step counter, any hashable) is the cache key and
-        the weight bytes are hashed only when the plan is first built —
-        the fast path for serving loops that would otherwise fingerprint
-        identical bytes on every call. A given weight must be looked up
-        under one scheme consistently; mixing builds it twice.
+        ``cfg`` is an :class:`EngineConfig` (preferred) or the legacy
+        ``w_bits`` int followed by ``t`` / ``groups``. ``qw`` is the full
+        2-D integer weight with all quantization groups concatenated along
+        K; grouped layers get one batched plan covering every group.
+        ``backend=`` (a registry name or backend object) attributes the
+        hit/miss to that backend in :meth:`stats`.
+
+        With ``version=`` the caller's tag (layer id + step counter, any
+        hashable) is the cache key and the weight bytes are hashed only
+        when the plan is first built — the fast path for serving loops
+        that would otherwise fingerprint identical bytes on every call. A
+        given weight must be looked up under one scheme consistently;
+        mixing builds it twice.
 
         Version keys trade away the content key's staleness immunity: a
         reused tag over *updated* weight bytes returns the old plan. Bump
@@ -178,32 +231,48 @@ class PlanCache:
         for), or drop it via :meth:`invalidate_version` /
         :meth:`invalidate` with the OLD bytes, before looking up again.
         """
-        return self._entry(qw, w_bits, t, groups, version).plan
+        cfg = _coerce_cfg(cfg, t, groups)
+        return self._entry(qw, cfg, version, _backend_tag(backend)).plan
 
-    def get_or_build_device(self, qw: np.ndarray, w_bits: int, t: int,
-                            groups: int = 1, *,
-                            version: Hashable | None = None) -> DevicePlan:
+    def get_or_build_device(self, qw: np.ndarray, cfg,
+                            t: int | None = None, groups: int = 1, *,
+                            version: Hashable | None = None,
+                            backend=None) -> DevicePlan:
         """Like :meth:`get_or_build`, but returns the device lowering.
 
-        The :class:`DevicePlan` is compiled once from the cached host plan
-        and memoised on the entry; repeated calls return the same pytree
-        (so jit caches keyed on leaf shapes stay warm)."""
-        entry = self._entry(qw, w_bits, t, groups, version)
-        if entry.device is None:
+        The lowering is compiled once per (entry, ``compile``-hook
+        implementation) — through the requesting backend's hook (default
+        ``engine_jit`` when the tag names no device lowering) — and
+        memoised on the entry; repeated calls return the same pytree (so
+        jit caches keyed on leaf shapes stay warm), and backends sharing
+        one hook (engine_jit / engine_pallas) share one pytree."""
+        cfg = _coerce_cfg(cfg, t, groups)
+        tag = _backend_tag(backend)
+        entry = self._entry(qw, cfg, version, tag)
+        # a passed backend *instance* compiles through its own hook even if
+        # it is not (or no longer) the registered one under that name
+        if isinstance(backend, TransitiveBackend):
+            bk = backend
+        else:
+            bk = get_backend(tag) if tag is not None else None
+        if bk is None or not (bk.device_resident and bk.needs_plan):
+            bk = get_backend("engine_jit")   # the default lowering
+        memo_key = type(bk).compile          # the hook implementation
+        if memo_key not in entry.device:
             # lower OUTSIDE the lock — index-array construction + device
             # transfer must not block concurrent hot-path lookups.
             # Double-checked: a racing compile keeps the first pytree.
-            device = compile_plan(entry.plan)
+            device = bk.compile(entry.plan)
             with self._lock:
-                if entry.device is None:
-                    entry.device = device
-        return entry.device
+                entry.device.setdefault(memo_key, device)
+        return entry.device[memo_key]
 
-    def run(self, qw: np.ndarray, x: np.ndarray, w_bits: int, t: int,
-            groups: int = 1, *,
-            version: Hashable | None = None) -> np.ndarray:
+    def run(self, qw: np.ndarray, x: np.ndarray, cfg,
+            t: int | None = None, groups: int = 1, *,
+            version: Hashable | None = None, backend=None) -> np.ndarray:
         """Cached GEMM: plan on first sight of ``qw``, run-only after."""
-        plan = self.get_or_build(qw, w_bits, t, groups, version=version)
+        cfg = _coerce_cfg(cfg, t, groups)
+        plan = self.get_or_build(qw, cfg, version=version, backend=backend)
         return BatchedTransitiveEngine(bits=plan.bits, t=plan.t).run(plan, x)
 
     # -- invalidation -----------------------------------------------------
@@ -259,18 +328,21 @@ class PlanCache:
         with self._lock:
             self.hits = self.misses = 0
             self.evictions = self.invalidations = 0
+            self._backend_stats = {}
 
     # -- introspection ----------------------------------------------------
     def __len__(self) -> int:
         with self._lock:
             return len(self._plans)
 
-    def stats(self) -> dict[str, int]:
+    def stats(self) -> dict[str, Any]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
                     "invalidations": self.invalidations,
-                    "size": len(self._plans), "capacity": self.capacity}
+                    "size": len(self._plans), "capacity": self.capacity,
+                    "backends": {b: dict(s)
+                                 for b, s in self._backend_stats.items()}}
 
     def __repr__(self) -> str:
         s = self.stats()
@@ -323,20 +395,47 @@ def _iter_ptq_layers(tree: Any) -> Iterator[tuple[np.ndarray, np.ndarray]]:
             yield from _iter_ptq_layers(v)
 
 
-def precompile(params: Any, cfg: Any,
-               cache: PlanCache | None = None) -> dict[str, int]:
+def _plan_knobs(cfg) -> tuple[int, int]:
+    """(w_bits, t) from a QuantConfig (transrow_t) or EngineConfig (t)."""
+    t = getattr(cfg, "transrow_t", None)
+    if t is None:
+        t = cfg.t
+    return int(cfg.w_bits), int(t)
+
+
+def _cfg_backend(cfg, backend):
+    """Resolve the backend a precompile/attach pass is on behalf of.
+
+    Explicit ``backend=`` wins; else a ``QuantConfig``-shaped ``cfg``
+    names its own backend; else None (counters stay unattributed)."""
+    if backend is not None:
+        return get_backend(backend)
+    named = getattr(cfg, "backend_name", None)
+    if callable(named):
+        return get_backend(named())
+    return None
+
+
+def precompile(params: Any, cfg: Any, cache: PlanCache | None = None, *,
+               backend=None) -> dict[str, int]:
     """Build every PTQ layer's ExecutionPlan once, ahead of serving.
 
     Walks ``params`` for ``{"qw", "sg"}`` layer dicts — including weights
     stacked along leading axes by the scan-over-super-blocks model init —
     and warms ``cache`` (default: the process cache) with one batched plan
     per distinct (weight, group) pair. ``cfg`` needs ``w_bits`` and
-    ``transrow_t`` attributes (a ``QuantConfig`` works).
+    ``transrow_t`` attributes (a ``QuantConfig`` works; an
+    :class:`EngineConfig` too). ``backend=`` overrides which registry
+    backend the cache counters attribute the builds to (default: the one
+    ``cfg`` names, if any).
 
     Returns ``{"layers": stacked leaf count, "plans": plan-build calls,
     "built": cold builds (== new cache misses)}``.
     """
     cache = default_cache() if cache is None else cache
+    b = _cfg_backend(cfg, backend)
+    tag = b.name if b is not None else None
+    w_bits, t = _plan_knobs(cfg)
     misses0 = cache.stats()["misses"]
     leaves = list(_iter_ptq_layers(params))
     # Size the cache to the model BEFORE building: otherwise a model with
@@ -348,33 +447,42 @@ def precompile(params: Any, cfg: Any,
     layers = plans = 0
     for qw, sg in leaves:
         layers += 1
-        groups = _layer_groups(sg)
+        ecfg = EngineConfig(w_bits=w_bits, t=t, groups=_layer_groups(sg))
         lead = qw.shape[:-2]
         for idx in np.ndindex(*lead):
-            cache.get_or_build(qw[idx], cfg.w_bits, cfg.transrow_t,
-                               groups=groups)
+            cache.get_or_build(qw[idx], ecfg, backend=tag)
             plans += 1
     return {"layers": layers, "plans": plans,
             "built": cache.stats()["misses"] - misses0}
 
 
 def attach_device_plans(params: Any, cfg: Any,
-                        cache: PlanCache | None = None) -> Any:
+                        cache: PlanCache | None = None, *,
+                        mesh=None, specs=None, backend=None) -> Any:
     """Return a copy of ``params`` with a compiled ``"dplan"`` per PTQ layer.
 
     For every ``{"qw", "sg"}`` layer dict the quantized weight's
-    :class:`DevicePlan` is compiled and embedded next to the weight; leaves
-    with vmap/scan leading axes get one plan per slice, padded to shared
-    bounds and **stacked along the same leading axes**, so ``lax.scan``
-    over stacked super-blocks slices the plan exactly like it slices the
-    weight. ``quant/qlinear.py`` ``path="engine_jit"``/``"engine_pallas"``
-    then execute pure-JAX from the embedded plan even where ``qw`` is a
-    tracer — the host callback is gone from the hot path entirely.
+    :class:`DevicePlan` is compiled — through the serving backend's
+    ``compile`` hook — and embedded next to the weight; leaves with
+    vmap/scan leading axes get one plan per slice, padded to shared bounds
+    and **stacked along the same leading axes**, so ``lax.scan`` over
+    stacked super-blocks slices the plan exactly like it slices the
+    weight. The device backends in ``quant/qlinear.py`` then execute
+    pure-JAX from the embedded plan even where ``qw`` is a tracer — the
+    host callback is gone from the hot path entirely.
+
+    ``backend=`` selects the registry backend whose ``compile`` hook lowers
+    the plans (default: the one ``cfg`` names, else ``engine_jit`` — every
+    built-in device backend shares the same lowering). With ``mesh=`` each
+    embedded plan's leaves are placed under ``specs``
+    (:func:`~repro.core.backend.shard_device_plan`) — e.g.
+    ``specs=P("data")`` shards the stacked leading axis across the mesh for
+    multi-device serving.
 
     Host ExecutionPlans are built through ``cache`` (default: process
     cache), so a preceding :func:`precompile` warmup is reused, not
     repeated. ``cfg`` needs ``w_bits`` and ``transrow_t`` (a
-    ``QuantConfig`` works).
+    ``QuantConfig`` works; an :class:`EngineConfig` too).
 
     An embedded plan is a snapshot: it is only as fresh as this call. On
     any weight update, ``invalidate`` the cache **and re-attach** — the
@@ -384,6 +492,15 @@ def attach_device_plans(params: Any, cfg: Any,
     import jax
 
     cache = default_cache() if cache is None else cache
+    b = _cfg_backend(cfg, backend)
+    if b is None:
+        b = get_backend("engine_jit")
+    if not (b.needs_plan and b.device_resident):
+        raise ValueError(
+            f"backend '{b.name}' does not execute from device plans; "
+            f"attach_device_plans serves device-resident planned backends "
+            f"(e.g. engine_jit, engine_pallas)")
+    w_bits, t = _plan_knobs(cfg)
     # size the cache to the model before building, like precompile: the
     # attach walk must not LRU-evict its own (or a prior warmup's) plans
     cache.reserve(sum(
@@ -395,21 +512,36 @@ def attach_device_plans(params: Any, cfg: Any,
             if _is_ptq_layer(tree):
                 qw = np.asarray(tree["qw"])
                 sg = np.asarray(tree["sg"])
-                groups = _layer_groups(sg)
+                ecfg = EngineConfig(w_bits=w_bits, t=t,
+                                    groups=_layer_groups(sg))
                 lead = qw.shape[:-2]
                 if lead:
                     # stacked leaves share direct-dispatch bounds, so they
                     # are lowered together rather than via the per-entry
                     # device memo
-                    plans = [cache.get_or_build(qw[idx], cfg.w_bits,
-                                                cfg.transrow_t, groups)
+                    plans = [cache.get_or_build(qw[idx], ecfg,
+                                                backend=b.name)
                              for idx in np.ndindex(*lead)]
+                    compiled = b.compile(plans)
+                    if not isinstance(compiled, DevicePlan):
+                        raise NotImplementedError(
+                            f"backend '{b.name}' compiles a custom plan "
+                            f"layout; the stacked/sharded attach walk "
+                            f"handles the standard DevicePlan only — "
+                            f"stack and place custom layouts inside the "
+                            f"backend's compile hook")
                     dplan = jax.tree.map(
-                        lambda a: a.reshape(lead + a.shape[1:]),
-                        compile_plans(plans))
+                        lambda a: a.reshape(lead + a.shape[1:]), compiled)
                 else:
-                    dplan = cache.get_or_build_device(
-                        qw, cfg.w_bits, cfg.transrow_t, groups)
+                    dplan = cache.get_or_build_device(qw, ecfg,
+                                                      backend=b.name)
+                if mesh is not None:
+                    if not isinstance(dplan, DevicePlan):
+                        raise NotImplementedError(
+                            f"backend '{b.name}' compiles a custom plan "
+                            f"layout; mesh placement is only automatic "
+                            f"for the standard DevicePlan")
+                    dplan = shard_device_plan(dplan, mesh, specs)
                 return {**tree, "dplan": dplan}
             return {k: walk(v) for k, v in tree.items()}
         if isinstance(tree, list):

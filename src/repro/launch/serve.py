@@ -3,29 +3,38 @@ Transitive-Array path (W4A8 TransitiveLinear + dynamic int8 attention +
 KV8 cache).
 
   PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --reduced \
-      --batch 4 --prompt-len 16 --gen 16 [--w-bits 4] [--path engine]
+      --batch 4 --prompt-len 16 --gen 16 [--w-bits 4] [--backend engine]
 
-``--path engine`` serves through the plan-cached Scoreboard forest: every
-layer's ExecutionPlan is built exactly once (offline precompile over the
-params pytree), decode is run-only, and the report splits plan-build time
-from decode time and prints the cache counters (misses == distinct
-quantized weights, hits == remaining engine forward calls).
+``--backend`` takes any name from the execution-backend registry
+(``repro.core.backend.list_backends()`` — the choice list below is
+enumerated from it, not hardcoded). What the launcher does follows the
+backend's declared capabilities:
 
-``--path engine_jit`` (and ``engine_pallas``) go further: the compiled
-plans are **device-resident** — embedded into the params pytree
-(``Model.attach_device_plans``) so the block scan slices them alongside
-the weights — and decode runs pure JAX with zero host callbacks.
+  * ``needs_plan`` backends (the engine family) serve plan-cached: every
+    layer's ExecutionPlan is built exactly once (offline precompile over
+    the params pytree), decode is run-only, and the report splits
+    plan-build time from decode time and prints the cache counters
+    (misses == distinct quantized weights, hits == remaining engine
+    forward calls) — per backend.
+  * ``device_resident`` planned backends additionally get their compiled
+    plans embedded into the params pytree (``Model.attach_device_plans``)
+    so the block scan slices them alongside the weights — decode runs
+    pure JAX with zero host callbacks.
+
+``--path`` is the deprecated spelling of ``--backend``.
 """
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
+from repro.core.backend import get_backend, list_backends
 from repro.launch.specs import serve_config
 from repro.models.model import Model
 from repro.train.serve_step import greedy_generate
@@ -38,29 +47,37 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--w-bits", type=int, default=4, choices=(4, 8))
-    ap.add_argument("--path", default="int_dot",
-                    choices=("int_dot", "lut", "pallas", "engine",
-                             "engine_jit", "engine_pallas"),
-                    help="integer-GEMM execution path for PTQ linears")
+    ap.add_argument("--backend", default=None, choices=list_backends(),
+                    help="integer-GEMM execution backend for PTQ linears "
+                    "(registry: repro.core.backend)")
+    ap.add_argument("--path", default=None, choices=list_backends(),
+                    help="DEPRECATED alias for --backend")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline comparison)")
     ap.add_argument("--no-precompile", action="store_true",
-                    help="skip the offline plan warmup (engine path only; "
-                    "plans then build lazily on first forward per weight)")
+                    help="skip the offline plan warmup (planned backends "
+                    "only; plans then build lazily on first forward per "
+                    "weight)")
     args = ap.parse_args()
+
+    name = args.backend or "int_dot"
+    if args.path is not None:
+        warnings.warn("--path is deprecated; use --backend",
+                      DeprecationWarning)
+        name = args.path if args.backend is None else name
+    backend = get_backend(name)
 
     base = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = base if args.fp else serve_config(base, w_bits=args.w_bits,
-                                            path=args.path)
+                                            backend=name)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    engine_path = not args.fp and args.path in ("engine", "engine_jit",
-                                                "engine_pallas")
-    device_path = engine_path and args.path != "engine"
+    planned = not args.fp and backend.needs_plan
+    device_path = planned and backend.device_resident
     plan_stats, t_plan, t_attach = {}, 0.0, 0.0
-    if engine_path:
+    if planned:
         from repro.core import plancache
         cache = plancache.default_cache()
         cache.reset_stats()
@@ -69,8 +86,9 @@ def main():
             plan_stats = model.precompile_plans(params)
             t_plan = time.time() - t0
         if device_path:
-            # device paths need plans as traced data inside the block scan;
-            # attach builds any still-missing plan through the same cache
+            # device-resident backends need plans as traced data inside the
+            # block scan; attach builds any still-missing plan through the
+            # same cache
             t0 = time.time()
             params = model.attach_device_plans(params)
             t_attach = time.time() - t0
@@ -88,10 +106,10 @@ def main():
     toks = greedy_generate(model, params, batch, max_len=max_len,
                            n_steps=args.gen)
     dt = time.time() - t0
-    mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{args.path}"
+    mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{name}"
     print(f"[{cfg.name} | {mode}] generated {args.batch}x{args.gen} tokens "
           f"in {dt:.2f}s")
-    if engine_path:
+    if planned:
         s = cache.stats()
         attach = (f" + device-plan attach {t_attach:.2f}s"
                   if device_path else "")
@@ -103,6 +121,9 @@ def main():
               f"{attach} | decode {dt:.2f}s {decode}")
         print(f"[plan cache] misses={s['misses']} hits={s['hits']} "
               f"evictions={s['evictions']} size={s['size']}")
+        for bname, bs in sorted(s["backends"].items()):
+            print(f"[plan cache]   {bname}: misses={bs['misses']} "
+                  f"hits={bs['hits']}")
         if s["misses"] != plan_stats.get("built", s["misses"]):
             print("[plan cache] WARNING: plans were built during decode — "
                   "re-planning leaked back into the hot path")

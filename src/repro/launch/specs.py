@@ -22,16 +22,24 @@ __all__ = ["serve_config", "train_cell_specs", "serve_cell_specs",
 
 
 def serve_config(cfg: ModelConfig, w_bits: int = 4,
-                 path: str = "int_dot") -> ModelConfig:
+                 backend: str = "int_dot",
+                 path: str | None = None) -> ModelConfig:
     """Serving variant: the paper's technique on — PTQ W4A8 linears
     (per-channel epilogue scales at scale) + dynamic int8 attention.
 
-    ``path`` selects the integer-GEMM execution (int_dot | lut | pallas |
-    engine); all are bit-exact on the int32 accumulator. ``engine`` serves
-    through the plan-cached Scoreboard forest (core/plancache.py)."""
+    ``backend`` names the integer-GEMM execution backend (any
+    ``repro.core.backend`` registry name — enumerate with
+    ``list_backends()``); all are bit-exact on the int32 accumulator.
+    Planned backends serve through the plan-cached Scoreboard forest
+    (core/plancache.py). ``path=`` is the deprecated spelling."""
+    if path is not None:
+        import warnings
+        warnings.warn("serve_config(path=...) is deprecated; use "
+                      "backend=...", DeprecationWarning, stacklevel=2)
+        backend = path
     return cfg.replace(
         quant=QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=0,
-                          path=path),
+                          backend=backend),
         quant_attention=not cfg.is_encdec,
         kv_cache_bits=8 if not cfg.is_encdec else 16,
         remat="none")

@@ -146,31 +146,44 @@ class Model:
         **process-level** plan cache — the only cache the qlinear hot-path
         callbacks consult (swap it via ``plancache.set_default_cache``) —
         so decode only ever pays ``run``. No-op (empty stats) unless this
-        model serves through an engine path (``engine`` / ``engine_jit`` /
-        ``engine_pallas``).
+        model's registered backend declares an offline plan half
+        (``needs_plan`` capability, core/backend.py).
         """
         q = self.cfg.quant
-        if q.mode != "ptq" or q.path not in ("engine", "engine_jit",
-                                             "engine_pallas"):
+        if q.mode != "ptq":
+            return {"layers": 0, "plans": 0, "built": 0}
+        from repro.core.backend import get_backend
+        if not get_backend(q).needs_plan:
             return {"layers": 0, "plans": 0, "built": 0}
         from repro.core import plancache
         return plancache.precompile(params, q)
 
-    def attach_device_plans(self, params: Params) -> Params:
+    def attach_device_plans(self, params: Params, *, mesh=None,
+                            specs=None) -> Params:
         """Embed compiled DevicePlans into the params for pure-JAX serving.
 
         The device-resident half of the offline split: every PTQ layer
         gains a ``"dplan"`` pytree (stacked along scan-stacked leading
-        axes) that ``lax.scan`` slices alongside the weights, so the
-        ``engine_jit`` / ``engine_pallas`` qlinear paths execute with zero
-        host callbacks even though block weights are tracers inside the
-        scan. No-op unless this model serves through one of those paths.
+        axes) that ``lax.scan`` slices alongside the weights, so
+        device-resident planned backends (``engine_jit``,
+        ``engine_pallas``, any custom one declaring ``device_resident`` +
+        ``needs_plan``) execute with zero host callbacks even though block
+        weights are tracers inside the scan. With ``mesh=`` the plan
+        leaves are placed under ``specs`` (``PartitionSpec``s — see
+        ``repro.core.backend.shard_device_plan``) for multi-device
+        serving. No-op unless the configured backend has both
+        capabilities.
         """
         q = self.cfg.quant
-        if q.mode != "ptq" or q.path not in ("engine_jit", "engine_pallas"):
+        if q.mode != "ptq":
+            return params
+        from repro.core.backend import get_backend
+        b = get_backend(q)
+        if not (b.needs_plan and b.device_resident):
             return params
         from repro.core import plancache
-        return plancache.attach_device_plans(params, q)
+        return plancache.attach_device_plans(params, q, mesh=mesh,
+                                             specs=specs)
 
     # ---- shared ------------------------------------------------------------
     def _embed_tokens(self, params, tokens):

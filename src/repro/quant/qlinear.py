@@ -5,45 +5,38 @@ Three operating modes:
   * ``qat``  — fake-quantized weights (straight-through), for training the
                models that will later serve through the Transitive Array.
   * ``ptq``  — weights stored as integers + scales; activations quantized
-               per-token at runtime; the integer GEMM runs through one of:
-      - ``int_dot``: dense int8 dot_general (int32 accumulation). The
-        MXU-native execution used by the full-scale dry-run.
-      - ``lut``:     pure-jnp dense doubling-LUT transitive execution
-                     (kernels/ref.py) — bit-exact with int_dot, the paper's
-                     result-reuse dataflow in software.
-      - ``pallas``:  the Pallas TPU kernel (kernels/transitive_gemm.py);
-                     interpret mode on CPU.
-      - ``engine``:  the batched multi-tile scoreboard engine
-                     (core/engine.py) on the host via pure_callback — the
-                     faithful Scoreboard-forest dataflow, bit-exact with
-                     int_dot. Kept as the oracle alongside transitive_ref.
-      - ``engine_jit``: the same planned forest executed **device-resident**
-                     (core/engine.py DevicePlan + run_device): pure jnp
-                     gathers/scatters under jit, zero host callbacks. Plans
-                     come from the process plan cache at trace time when the
-                     weight is concrete, or from a ``"dplan"`` embedded in
-                     the params (plancache.attach_device_plans) when the
-                     weight is a tracer — e.g. inside the model's block
-                     scan.
-      - ``engine_pallas``: the DevicePlan forest as a Pallas kernel
-                     (kernels/transitive_forest.py; interpret on CPU).
+               per-token at runtime; the integer GEMM routes through a
+               **registered execution backend** (core/backend.py):
+               ``int_dot`` (dense MXU int GEMM), ``lut`` / ``pallas`` (the
+               doubling-LUT dataflow, jnp / Pallas kernel), ``engine``
+               (host Scoreboard forest via pure_callback — the oracle),
+               ``engine_jit`` / ``engine_pallas`` (the planned forest
+               device-resident, zero host callbacks). Any backend
+               registered via ``repro.core.backend.register_backend``
+               is selectable by name — there is no string dispatch here.
 
-All paths share the same quantization, so they agree bit-exactly on the
-int32 accumulator (property-tested).
+All backends share the same quantization, so they agree bit-exactly on the
+int32 accumulator (property-tested over ``list_backends()``).
 
 Layers are functional: ``linear_init`` builds a params dict,
 ``linear_apply`` consumes it. Weight layout is (d_out, d_in) so the
 reduction axis is last (TransRows slice along it).
+
+``QuantConfig.backend`` names the registry backend; the legacy
+``QuantConfig(path=...)`` spelling still resolves through the same registry
+but emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 import repro.quant.quantize as Q
+from repro.core.backend import EngineConfig, get_backend, list_backends
 
 __all__ = ["QuantConfig", "linear_init", "linear_apply"]
 
@@ -54,12 +47,28 @@ class QuantConfig:
     w_bits: int = 8
     a_bits: int = 8
     group: int = 128          # group size along d_in (exact paths / qat)
-    # int_dot | lut | pallas | engine | engine_jit | engine_pallas
-    path: str = "int_dot"
-    transrow_t: int = 8       # TransRow width for transitive paths
+    # integer-GEMM execution backend — any repro.core.backend registry name
+    backend: str = "int_dot"
+    # DEPRECATED alias for ``backend``; resolves via the shim below
+    path: str | None = None
+    transrow_t: int = 8       # TransRow width for transitive backends
 
     def with_(self, **kw) -> "QuantConfig":
         return dataclasses.replace(self, **kw)
+
+    def backend_name(self) -> str:
+        """The registry backend this config serves through.
+
+        Legacy ``path=`` strings take precedence (existing configs keep
+        their meaning) but warn: the strings were ad-hoc; the registry is
+        the API."""
+        if self.path is not None:
+            warnings.warn(
+                "QuantConfig(path=...) is deprecated; use backend=... — "
+                "names resolve through repro.core.backend.get_backend",
+                DeprecationWarning, stacklevel=2)
+            return self.path
+        return self.backend
 
 
 def _effective_group(cfg: QuantConfig, d_in: int) -> int:
@@ -81,170 +90,96 @@ def linear_init(key: jax.Array, d_in: int, d_out: int,
     return {"qw": qw, "sg": sg.astype(jnp.float32)}
 
 
-def _int_matmul(qx: jnp.ndarray, qw: jnp.ndarray) -> jnp.ndarray:
-    """int8 (..., K) x int8 (N, K) -> int32 (..., N)."""
-    return jax.lax.dot_general(
-        qx, qw, (((qx.ndim - 1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32)
-
-
-def _engine_matmul(qx: jnp.ndarray, qw: jnp.ndarray, w_bits: int,
-                   t: int) -> jnp.ndarray:
-    """Batched transitive engine (host numpy) as a jit-safe integer GEMM.
-
-    The hot path is run-only: the weight-side plan comes from the
-    process-level plan cache (core/plancache.py), so planning happens once
-    per distinct quantized weight, not once per forward call."""
-    import numpy as np
-    from repro.core import plancache
-
-    out = jax.ShapeDtypeStruct(qx.shape[:-1] + (qw.shape[0],), jnp.int32)
-
-    def host(qx_np, qw_np):
-        # shape-agnostic: under vmap the callback sees extra leading axes
-        # (size-1 on the unmapped weight with vmap_method="expand_dims").
-        qw2 = np.asarray(qw_np).reshape(qw_np.shape[-2:])
-        flat = np.asarray(qx_np, np.int64).reshape(-1, qx_np.shape[-1])
-        y = plancache.default_cache().run(qw2, flat.T, w_bits, t).T
-        return (y.reshape(qx_np.shape[:-1] + (qw2.shape[0],))
-                .astype(np.int32))
-
-    from repro import jax_compat
-    return jax_compat.pure_callback(host, out, qx, qw,
-                                    vmap_method="expand_dims")
-
-
-def _engine_matmul_grouped(xg: jnp.ndarray, wg: jnp.ndarray, w_bits: int,
-                           t: int) -> jnp.ndarray:
-    """Grouped engine GEMM: xg (..., G, g) x wg (N, G, g) -> (..., G, N).
-
-    All ``G`` groups execute as *one* cached plan with a batched tile axis
-    (engine ``groups=G``) — one host round trip, one scoreboard build, no
-    per-group Python loop."""
-    import numpy as np
-    from repro.core import plancache
-
-    n, n_groups, g = wg.shape
-    out = jax.ShapeDtypeStruct(xg.shape[:-1] + (n,), jnp.int32)
-
-    def host(xg_np, wg_np):
-        qw2 = np.asarray(wg_np).reshape(wg_np.shape[-3], n_groups * g)
-        flat = np.asarray(xg_np, np.int64).reshape(-1, n_groups * g)
-        part = plancache.default_cache().run(qw2, flat.T, w_bits, t,
-                                             groups=n_groups)   # (N, G, M)
-        return (part.transpose(2, 1, 0)
-                .reshape(xg_np.shape[:-1] + (n,)).astype(np.int32))
-
-    from repro import jax_compat
-    return jax_compat.pure_callback(host, out, xg, wg,
-                                    vmap_method="expand_dims")
-
-
-def _device_plan(params, qw: jnp.ndarray, w_bits: int, t: int, groups: int):
-    """Resolve the DevicePlan for the engine_jit / engine_pallas paths.
+def _resolve_device_plan(params, backend, qw: jnp.ndarray,
+                         ecfg: EngineConfig):
+    """Resolve the DevicePlan a device-resident planned backend executes.
 
     Preference order: a ``"dplan"`` embedded in the params (survives jit /
     vmap / scan — the weight may be a tracer there), else a trace-time
-    process-cache lookup, which needs the weight concrete."""
+    process-cache lookup, which needs the weight concrete. Backends that
+    do not consume device plans resolve to None."""
+    if not (backend.needs_plan and backend.device_resident):
+        return None
     dplan = params.get("dplan")
     if dplan is not None:
         # consistency of everything checkable under trace. Weight CONTENT
         # cannot be checked here (qw may be a tracer): an embedded plan is
         # only as fresh as the last attach_device_plans — re-attach after
         # any weight update, or the old weights' GEMM comes back silently.
-        sig = (dplan.bits, dplan.t, dplan.n, dplan.k, dplan.groups)
-        want = (w_bits, t, qw.shape[-2], qw.shape[-1], groups)
-        if sig != want:
-            raise ValueError(
-                f"attached plan signature (bits, t, n, k, groups)={sig} "
-                f"does not match the layer's {want} — re-attach with the "
-                f"serving QuantConfig")
+        # Custom backends with their own lowering layout validate inside
+        # their execute(); only the standard DevicePlan schema is checked
+        # here.
+        from repro.core.engine import DevicePlan
+        if isinstance(dplan, DevicePlan):
+            sig = (dplan.bits, dplan.t, dplan.n, dplan.k, dplan.groups)
+            want = (ecfg.w_bits, ecfg.t, qw.shape[-2], qw.shape[-1],
+                    ecfg.groups)
+            if sig != want:
+                raise ValueError(
+                    f"attached plan signature (bits, t, n, k, groups)="
+                    f"{sig} does not match the layer's {want} — re-attach "
+                    f"with the serving QuantConfig")
         return dplan
     if isinstance(qw, jax.core.Tracer):
+        fallback = ", ".join(
+            n for n in list_backends()
+            if not (get_backend(n).needs_plan
+                    and get_backend(n).device_resident))
         raise ValueError(
-            "path='engine_jit'/'engine_pallas' saw a traced weight with no "
-            "attached plan: embed plans with "
-            "plancache.attach_device_plans(params, cfg) (or "
-            "Model.attach_device_plans) before jit, or close the params "
-            "over the jit. path='engine' (host callback) also handles "
-            "traced weights.")
+            f"backend '{backend.name}' is device-resident and saw a traced "
+            f"weight with no attached DevicePlan. Remedy: embed plans with "
+            f"plancache.attach_device_plans(params, cfg) (or "
+            f"Model.attach_device_plans) before jit, or close concrete "
+            f"params over the jit. Registered backends that handle traced "
+            f"weights without attachment: {fallback}.")
     import numpy as np
     from repro.core import plancache
     return plancache.default_cache().get_or_build_device(
-        np.asarray(qw), w_bits, t, groups)
+        np.asarray(qw), ecfg, backend=backend.name)
 
 
-def _run_dplan(dplan, flat: jnp.ndarray, path: str) -> jnp.ndarray:
-    """Shared backend dispatch: flat (K, B) activations through the plan."""
-    if path == "engine_pallas":
-        from repro.kernels import transitive_forest
-        return transitive_forest.transitive_forest(dplan, flat)
-    from repro.core import engine
-    return engine.run_device_jit(dplan, flat)
+def _resolve_plan(backend, qw: jnp.ndarray, ecfg: EngineConfig, dplan):
+    """Resolve the host ExecutionPlan for a ``needs_plan`` backend.
 
-
-def _engine_matmul_device(qx: jnp.ndarray, dplan, path: str) -> jnp.ndarray:
-    """Device-resident forest GEMM: qx (..., K) -> int32 (..., N).
-
-    Pure JAX end to end — the lowered jaxpr contains no pure_callback."""
-    flat = qx.reshape(-1, qx.shape[-1]).astype(jnp.int32).T    # (K, B)
-    y = _run_dplan(dplan, flat, path)                          # (N, B)
-    return y.T.reshape(qx.shape[:-1] + (dplan.n,))
-
-
-def _engine_matmul_device_grouped(xg: jnp.ndarray, dplan,
-                                  path: str) -> jnp.ndarray:
-    """Grouped device forest: xg (..., G, g) -> int32 (..., G, N)."""
-    n_groups, g = xg.shape[-2], xg.shape[-1]
-    flat = xg.reshape(-1, n_groups * g).astype(jnp.int32).T
-    y = _run_dplan(dplan, flat, path)                          # (N, G, B)
-    return y.transpose(2, 1, 0).reshape(xg.shape[:-1] + (dplan.n,))
+    A device plan supersedes it; a traced weight cannot be planned here
+    (host backends then resolve plans themselves — the built-in engine
+    looks the plan up in the process cache inside its callback)."""
+    if not backend.needs_plan or dplan is not None:
+        return None
+    if isinstance(qw, jax.core.Tracer):
+        return None
+    import numpy as np
+    return backend.plan(np.asarray(qw), ecfg)
 
 
 def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    backend = get_backend(cfg.backend_name())
     qw, sg = params["qw"], params["sg"]
     d_out, d_in = qw.shape
     g = d_in // sg.shape[-1]
     qx, sx = Q.quantize_per_token(x, cfg.a_bits)
     if sg.shape[-1] == 1:
         # per-channel: one dense int GEMM + epilogue scale
-        if cfg.path == "lut":
-            from repro.kernels import ref
-            y32 = ref.transitive_matmul_ref(qx, qw, cfg.w_bits, cfg.transrow_t)
-        elif cfg.path == "pallas":
-            from repro.kernels import ops
-            y32 = ops.transitive_gemm(qx, qw, w_bits=cfg.w_bits,
-                                      t=cfg.transrow_t)
-        elif cfg.path == "engine":
-            y32 = _engine_matmul(qx, qw, cfg.w_bits, cfg.transrow_t)
-        elif cfg.path in ("engine_jit", "engine_pallas"):
-            dplan = _device_plan(params, qw, cfg.w_bits, cfg.transrow_t, 1)
-            y32 = _engine_matmul_device(qx, dplan, cfg.path)
-        else:
-            y32 = _int_matmul(qx, qw)
+        ecfg = EngineConfig.from_quant(cfg, groups=1)
+        dplan = _resolve_device_plan(params, backend, qw, ecfg)
+        plan = _resolve_plan(backend, qw, ecfg, dplan)
+        y32 = backend.execute(qx, qw, plan, dplan, ecfg)
         y = y32.astype(jnp.float32) * sx * sg[:, 0]
     else:
         # group-wise: per-group int partials rescaled in the epilogue —
         # the VPU "integer scale factor per 128/T tile" of Sec. 4.5.
-        xg = qx.reshape(qx.shape[:-1] + (d_in // g, g))
-        wg = qw.reshape(d_out, d_in // g, g)
-        if cfg.path == "lut":
-            from repro.kernels import ref
-            part = ref.transitive_matmul_grouped_ref(xg, wg, cfg.w_bits,
-                                                     cfg.transrow_t)
-        elif cfg.path == "pallas":
-            from repro.kernels import ops
-            part = ops.transitive_gemm_grouped(xg, wg, w_bits=cfg.w_bits,
-                                               t=cfg.transrow_t)
-        elif cfg.path == "engine":
-            part = _engine_matmul_grouped(xg, wg, cfg.w_bits, cfg.transrow_t)
-        elif cfg.path in ("engine_jit", "engine_pallas"):
-            dplan = _device_plan(params, qw, cfg.w_bits, cfg.transrow_t,
-                                 d_in // g)
-            part = _engine_matmul_device_grouped(xg, dplan, cfg.path)
-        else:
-            part = jnp.einsum("...gi,ngi->...gn", xg, wg,
-                              preferred_element_type=jnp.int32)
+        n_groups = d_in // g
+        if not backend.supports_groups:
+            raise ValueError(
+                f"backend '{backend.name}' does not support group-wise "
+                f"quantization (supports_groups=False); use group=0 "
+                f"(per-channel) or a grouped backend")
+        ecfg = EngineConfig.from_quant(cfg, groups=n_groups)
+        dplan = _resolve_device_plan(params, backend, qw, ecfg)
+        plan = _resolve_plan(backend, qw, ecfg, dplan)   # from 2-D qw
+        xg = qx.reshape(qx.shape[:-1] + (n_groups, g))
+        wg = qw.reshape(d_out, n_groups, g)
+        part = backend.execute(xg, wg, plan, dplan, ecfg)   # (..., G, N)
         y = jnp.einsum("...gn,ng->...n", part.astype(jnp.float32), sg) * sx
     return y.astype(x.dtype)
 

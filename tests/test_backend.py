@@ -1,0 +1,391 @@
+"""Backend registry tests (core/backend.py + the rewired dispatch sites).
+
+Covers the ISSUE-4 acceptance surface: registry semantics (duplicate
+registration, unknown-name errors listing the valid names), the
+``EngineConfig`` dataclass, the legacy ``QuantConfig(path=...)``
+deprecation shim (warns AND stays bit-exact), custom-backend registration
+flowing through ``linear_apply`` untouched, per-backend PlanCache counter
+attribution, the ``compile(..., mesh, specs)`` sharding hook, and the
+backend-tagged DevicePlan persistence bundle.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core.backend as BK
+from repro.core.backend import (EngineConfig, TransitiveBackend,
+                                get_backend, list_backends,
+                                register_backend, shard_device_plan,
+                                unregister_backend)
+from repro.core.engine import (DEVICE_DATA_FIELDS, BatchedTransitiveEngine,
+                               ExecutionPlan)
+
+BUILTINS = ("int_dot", "lut", "pallas", "engine", "engine_jit",
+            "engine_pallas")
+
+
+@pytest.fixture
+def cache():
+    """Fresh process-default plan cache per test; restores the previous."""
+    from repro.core.plancache import PlanCache, set_default_cache
+    c = PlanCache(capacity=64)
+    prev = set_default_cache(c)
+    yield c
+    set_default_cache(prev)
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_all_builtin_backends_registered():
+    assert set(BUILTINS) <= set(list_backends())
+
+
+def test_capability_flags_declared():
+    """The four strategies declare the capabilities the launchers key on."""
+    assert not get_backend("int_dot").needs_plan
+    assert get_backend("engine").needs_plan
+    assert not get_backend("engine").device_resident
+    for name in ("engine_jit", "engine_pallas"):
+        b = get_backend(name)
+        assert b.needs_plan and b.device_resident
+    for name in BUILTINS:           # everything here runs on the CPU runner
+        assert get_backend(name).cpu_ok
+        assert get_backend(name).supports_groups
+
+
+def test_duplicate_registration_is_loud():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(BK.IntDotBackend())
+    # replace=True is the explicit override
+    prev = get_backend("int_dot")
+    try:
+        mine = register_backend(BK.IntDotBackend(), replace=True)
+        assert get_backend("int_dot") is mine
+    finally:
+        register_backend(prev, replace=True)
+
+
+def test_unknown_backend_error_lists_valid_names():
+    with pytest.raises(KeyError) as ei:
+        get_backend("definitely_not_a_backend")
+    msg = str(ei.value)
+    for name in BUILTINS:
+        assert name in msg
+    with pytest.raises(KeyError):
+        unregister_backend("definitely_not_a_backend")
+
+
+def test_nameless_backend_rejected():
+    with pytest.raises(ValueError, match="name"):
+        register_backend(TransitiveBackend())
+
+
+def test_get_backend_accepts_instances_and_configs():
+    from repro.quant import QuantConfig
+    b = get_backend("engine_jit")
+    assert get_backend(b) is b
+    assert get_backend(QuantConfig(backend="engine_jit")) is b
+
+
+def test_custom_backend_flows_through_linear_apply():
+    """A registered custom backend is selectable by name with no dispatch
+    changes anywhere — the point of the registry."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+
+    class ShiftyIntDot(BK.IntDotBackend):
+        name = "custom_int_dot"
+
+    register_backend(ShiftyIntDot())
+    try:
+        cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
+                          backend="custom_int_dot")
+        p = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(linear_apply(p, x, cfg)),
+            np.asarray(linear_apply(p, x, cfg.with_(backend="int_dot"))))
+    finally:
+        unregister_backend("custom_int_dot")
+    with pytest.raises(KeyError):
+        get_backend("custom_int_dot")
+
+
+# -- EngineConfig -----------------------------------------------------------
+
+def test_engine_config_from_quant():
+    from repro.quant import QuantConfig
+    q = QuantConfig(mode="ptq", w_bits=4, transrow_t=4)
+    e = EngineConfig.from_quant(q, groups=3)
+    assert (e.w_bits, e.t, e.groups) == (4, 4, 3)
+    assert e.key() == (4, 4, 3)
+
+
+def test_plancache_accepts_config_and_legacy_ints(rng):
+    from repro.core.plancache import PlanCache
+    c = PlanCache()
+    w = rng.integers(-8, 8, (5, 32))
+    p1 = c.get_or_build(w, EngineConfig(w_bits=4, t=8))
+    p2 = c.get_or_build(w, 4, 8)          # legacy ints -> same entry
+    assert p1 is p2
+    assert c.stats()["misses"] == 1 and c.stats()["hits"] == 1
+    with pytest.raises(TypeError):        # both forms at once is an error
+        c.get_or_build(w, EngineConfig(4, 8), 8)
+    with pytest.raises(TypeError):        # ... including a stray groups=
+        c.get_or_build(w, EngineConfig(4, 8), groups=16)
+    with pytest.raises(TypeError):        # legacy form without t
+        c.get_or_build(w, 4)
+
+
+def test_device_memo_keyed_per_compile_hook(rng):
+    """A custom device backend with its own lowering must not be served
+    another backend's memoised DevicePlan — while backends sharing one
+    compile hook (engine_jit / engine_pallas) share one memoised pytree
+    instead of double-compiling."""
+    import jax
+    from repro.core.plancache import PlanCache
+
+    class Doubler(BK.EngineJitBackend):
+        name = "custom_doubler"
+
+        def compile(self, plan, mesh=None, specs=None):
+            d = super().compile(plan, mesh=mesh, specs=specs)
+            # a deliberately different (useless) lowering layout
+            return jax.tree.map(lambda a: a, d), "tagged"
+
+    register_backend(Doubler())
+    try:
+        c = PlanCache()
+        w = rng.integers(-8, 8, (5, 32))
+        ecfg = EngineConfig(w_bits=4, t=8)
+        d_jit = c.get_or_build_device(w, ecfg, backend="engine_jit")
+        d_custom = c.get_or_build_device(w, ecfg, backend="custom_doubler")
+        assert isinstance(d_custom, tuple) and d_custom[1] == "tagged"
+        assert c.get_or_build_device(w, ecfg,
+                                     backend="engine_jit") is d_jit
+        assert c.get_or_build_device(w, ecfg,
+                                     backend="custom_doubler") is d_custom
+        # shared hook -> shared lowering, no duplicate compile
+        assert c.get_or_build_device(w, ecfg,
+                                     backend="engine_pallas") is d_jit
+    finally:
+        unregister_backend("custom_doubler")
+
+
+def test_engine_backend_uses_passed_plan_without_cache_traffic(rng):
+    """The protocol's plan argument is honored: an engine execute with a
+    resolved plan makes zero lookups in the process cache."""
+    import jax.numpy as jnp
+    from repro.core.plancache import PlanCache, set_default_cache
+    b = get_backend("engine")
+    w = rng.integers(-8, 8, (6, 32))
+    x = rng.integers(-128, 128, (3, 32))
+    ecfg = EngineConfig(w_bits=4, t=8)
+    plan = BatchedTransitiveEngine(4, 8).plan(w)
+    empty = PlanCache()
+    prev = set_default_cache(empty)
+    try:
+        got = np.asarray(b.execute(jnp.asarray(x, jnp.int8),
+                                   jnp.asarray(w, jnp.int8),
+                                   plan, None, ecfg))
+    finally:
+        set_default_cache(prev)
+    np.testing.assert_array_equal(got,
+                                  x.astype(np.int64) @ w.astype(np.int64).T)
+    s = empty.stats()
+    assert s["hits"] == 0 and s["misses"] == 0
+    # a plan whose signature disagrees with the config is a loud error
+    with pytest.raises(ValueError, match="signature"):
+        b.execute(jnp.asarray(x, jnp.int8), jnp.asarray(w, jnp.int8),
+                  plan, None, EngineConfig(w_bits=8, t=8))
+
+
+# -- the legacy path= shim --------------------------------------------------
+
+def test_path_shim_warns_and_resolves():
+    from repro.quant import QuantConfig
+    cfg = QuantConfig(mode="ptq", path="engine")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        assert cfg.backend_name() == "engine"
+    # without path, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert QuantConfig(backend="lut").backend_name() == "lut"
+
+
+@pytest.mark.parametrize("legacy", ["int_dot", "lut", "engine"])
+def test_path_shim_bit_exact_with_backend_field(legacy):
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0)
+    p = linear_init(jax.random.PRNGKey(0), 64, 12, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64), jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        y_legacy = linear_apply(p, x, cfg.with_(path=legacy))
+    y_new = linear_apply(p, x, cfg.with_(backend=legacy))
+    np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y_new))
+
+
+def test_serve_config_path_kwarg_shim():
+    from repro.configs import get_reduced
+    from repro.launch.specs import serve_config
+    with pytest.warns(DeprecationWarning):
+        cfg = serve_config(get_reduced("smollm-135m"), w_bits=4,
+                           path="engine")
+    assert cfg.quant.backend_name() == "engine"
+
+
+# -- per-backend cache counters ---------------------------------------------
+
+def test_plancache_counters_have_backend_dimension(rng):
+    from repro.core.plancache import PlanCache
+    c = PlanCache()
+    w = rng.integers(-8, 8, (5, 32))
+    ecfg = EngineConfig(w_bits=4, t=8)
+    c.get_or_build(w, ecfg, backend="engine")          # miss
+    c.get_or_build(w, ecfg, backend="engine")          # hit
+    c.get_or_build(w, ecfg, backend="engine_jit")      # hit, other backend
+    c.get_or_build(w, ecfg)                            # untagged hit
+    s = c.stats()
+    assert s["misses"] == 1 and s["hits"] == 3
+    assert s["backends"]["engine"] == {"hits": 1, "misses": 1}
+    assert s["backends"]["engine_jit"] == {"hits": 1, "misses": 0}
+    c.reset_stats()
+    assert c.stats()["backends"] == {}
+
+
+# -- sharding hook: compile(..., mesh, specs) -------------------------------
+
+def _mesh():
+    import jax
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def test_compile_with_partition_specs_bit_exact(rng):
+    """The acceptance smoke: a DevicePlan compiled with explicit
+    PartitionSpecs has bit-identical leaves and executes bit-exactly."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engine import run_device_jit
+    w = rng.integers(-8, 8, (6, 32))
+    plan = BatchedTransitiveEngine(4, 8).plan(w)
+    b = get_backend("engine_jit")
+    plain = b.compile(plan)
+    sharded = b.compile(plan, mesh=_mesh(), specs=P())
+    for f in DEVICE_DATA_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(sharded, f)),
+                                      np.asarray(getattr(plain, f)))
+    x = rng.integers(-128, 128, (32, 4))
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(sharded, jnp.asarray(x))),
+        w.astype(np.int64) @ x.astype(np.int64))
+
+
+def test_shard_device_plan_spec_forms(rng):
+    from jax.sharding import PartitionSpec as P
+    plan = BatchedTransitiveEngine(4, 8).plan(rng.integers(-8, 8, (4, 16)))
+    dplan = get_backend("engine_jit").compile(plan)
+    mesh = _mesh()
+    for specs in (None, P(), {"gather_idx": P()}):
+        out = shard_device_plan(dplan, mesh, specs)
+        np.testing.assert_array_equal(np.asarray(out.gather_idx),
+                                      np.asarray(dplan.gather_idx))
+    with pytest.raises(ValueError, match="unknown DevicePlan leaf"):
+        shard_device_plan(dplan, mesh, {"nonsense": P()})
+    with pytest.raises(TypeError):
+        shard_device_plan(dplan, mesh, 42)
+
+
+def test_attach_device_plans_threads_mesh_and_specs(cache):
+    """attach_device_plans(mesh=, specs=) places stacked plan leaves; the
+    values (and the serving output) are unchanged."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.plancache import attach_device_plans
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
+                      backend="engine_jit")
+    stacked = jax.vmap(lambda k: linear_init(k, 128, 16, cfg))(
+        jax.random.split(jax.random.PRNGKey(1), 3))
+    plain = attach_device_plans({"b": stacked}, cfg, cache=cache)
+    placed = attach_device_plans({"b": stacked}, cfg, cache=cache,
+                                 mesh=_mesh(), specs=P("data"))
+    for f in DEVICE_DATA_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(placed["b"]["dplan"], f)),
+            np.asarray(getattr(plain["b"]["dplan"], f)))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 128))
+    p0 = jax.tree.map(lambda a: a[0], placed["b"])
+    np.testing.assert_array_equal(
+        np.asarray(linear_apply(p0, x, cfg)),
+        np.asarray(linear_apply(jax.tree.map(lambda a: a[0], stacked), x,
+                                cfg.with_(backend="int_dot"))))
+
+
+def test_attach_device_plans_rejects_planless_backend(cache):
+    from repro.core.plancache import attach_device_plans
+    from repro.quant import QuantConfig
+    with pytest.raises(ValueError, match="device plans"):
+        attach_device_plans({}, QuantConfig(mode="ptq", backend="int_dot"),
+                            cache=cache)
+
+
+# -- backend-tagged DevicePlan persistence ----------------------------------
+
+def test_device_plan_persistence_bundle(tmp_path, rng):
+    """ExecutionPlan.save(device=, backend=) round-trips the cached
+    lowering across processes: every leaf bit-exact, backend tag intact,
+    and the loaded device plan executes bit-exactly — including one
+    compiled with explicit PartitionSpecs."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engine import run_device_jit
+    w = rng.integers(-8, 8, (5, 32))
+    eng = BatchedTransitiveEngine(4, 8)
+    plan = eng.plan(w, groups=2)
+    b = get_backend("engine_jit")
+    dplan = b.compile(plan, mesh=_mesh(), specs=P())
+    path = tmp_path / "bundle.npz"
+    plan.save(path, device=dplan, backend=b.name)
+    bundle = ExecutionPlan.load_bundle(path)
+    assert bundle.backend == "engine_jit"
+    for f in DEVICE_DATA_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(bundle.device, f)),
+                                      np.asarray(getattr(dplan, f)))
+    assert (bundle.device.t, bundle.device.bits, bundle.device.n,
+            bundle.device.k, bundle.device.groups) == \
+        (dplan.t, dplan.bits, dplan.n, dplan.k, dplan.groups)
+    x = rng.integers(-128, 128, (32, 3))
+    np.testing.assert_array_equal(
+        np.asarray(run_device_jit(bundle.device, jnp.asarray(x))),
+        np.asarray(run_device_jit(dplan, jnp.asarray(x))))
+    # the host plan in the bundle still round-trips like a plain save
+    np.testing.assert_array_equal(eng.run(bundle.plan, x), eng.run(plan, x))
+
+
+def test_plan_save_without_device_loads_none(tmp_path, rng):
+    plan = BatchedTransitiveEngine(4, 8).plan(rng.integers(-8, 8, (4, 16)))
+    path = tmp_path / "plain.npz"
+    plan.save(path)
+    bundle = ExecutionPlan.load_bundle(path)
+    assert bundle.device is None and bundle.backend is None
+    np.testing.assert_array_equal(bundle.plan.rows, plan.rows)
+
+
+# -- CLI helper (the CI serve-smoke loop consumes this) ---------------------
+
+def test_backend_module_cli_lists_cpu_backends():
+    import subprocess
+    import sys
+    import os
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.backend", "--cpu"],
+        capture_output=True, text=True, env=env, check=True).stdout.split()
+    assert set(BUILTINS) <= set(out)

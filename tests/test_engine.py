@@ -89,16 +89,65 @@ def test_engine_vs_pallas_interpret(bits, t, rng):
 @pytest.mark.parametrize("group", [0, 64])
 @pytest.mark.parametrize("w_bits", [4, 8])
 def test_engine_quant_path_matches_int_dot(group, w_bits):
-    """linear_apply path="engine" is bit-exact with the int_dot path."""
+    """linear_apply backend="engine" is bit-exact with the int_dot one."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
     cfg = QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=group)
     p = linear_init(jax.random.PRNGKey(0), 128, 48, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 128), jnp.float32)
-    y_int = linear_apply(p, x, cfg.with_(path="int_dot"))
-    y_eng = linear_apply(p, x, cfg.with_(path="engine"))
+    y_int = linear_apply(p, x, cfg.with_(backend="int_dot"))
+    y_eng = linear_apply(p, x, cfg.with_(backend="engine"))
     np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_eng))
+
+
+# -- the registry-wide differential pyramid ---------------------------------
+#
+# Parametrized over list_backends() at collection time: any newly
+# registered backend automatically inherits the bit-exactness obligation
+# (backend == ref == int64 GEMM on the int accumulator) with no test edit.
+from repro.core.backend import EngineConfig, get_backend, list_backends
+
+
+@pytest.mark.parametrize("backend", list_backends())
+def test_registered_backend_execute_matches_ref_and_int64(backend, rng):
+    """Engine-level rung: every registered backend's execute() ==
+    transitive_ref == int64 GEMM (int32 accumulator congruence)."""
+    import jax.numpy as jnp
+    b = get_backend(backend)
+    ecfg = EngineConfig(w_bits=4, t=8, groups=1)
+    w = rng.integers(-8, 8, size=(7, 32))
+    x = rng.integers(-128, 128, size=(3, 32))          # row-major (M, K)
+    want = x.astype(np.int64) @ w.astype(np.int64).T
+    ref = transitive_gemm_ref(w, x.T, 4, 8).T
+    np.testing.assert_array_equal(ref, want)
+    plan = b.plan(w, ecfg) if b.needs_plan else None
+    dplan = (b.compile(plan) if b.needs_plan and b.device_resident
+             else None)
+    got = np.asarray(b.execute(jnp.asarray(x, jnp.int8),
+                               jnp.asarray(w, jnp.int8),
+                               plan, dplan, ecfg))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("group", [0, 64])
+@pytest.mark.parametrize("backend", list_backends())
+def test_registered_backend_quant_layer_matches_int_dot(backend, group, rng):
+    """Layer-level rung: linear_apply through every registered backend is
+    bit-exact with int_dot — grouped and per-channel."""
+    import jax
+    import jax.numpy as jnp
+    from repro.quant import QuantConfig, linear_init, linear_apply
+    b = get_backend(backend)
+    if group and not b.supports_groups:
+        pytest.skip(f"backend '{backend}' declares supports_groups=False")
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group,
+                      backend=backend)
+    p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(linear_apply(p, x, cfg)),
+        np.asarray(linear_apply(p, x, cfg.with_(backend="int_dot"))))
 
 
 def test_plan_reused_across_activations(rng):
@@ -257,57 +306,66 @@ def test_plan_save_load_roundtrip(pattern, tmp_path, rng):
 # -- quant path: engine_jit / engine_pallas ---------------------------------
 
 @pytest.mark.parametrize("group", [0, 64])
-@pytest.mark.parametrize("path", ["engine_jit", "engine_pallas"])
-def test_engine_jit_quant_path_matches_int_dot(group, path):
-    """linear_apply device paths are bit-exact with int_dot, eager and
+@pytest.mark.parametrize("backend", ["engine_jit", "engine_pallas"])
+def test_engine_jit_quant_path_matches_int_dot(group, backend):
+    """linear_apply device backends are bit-exact with int_dot, eager and
     under jit + vmap (compared jit-to-jit: the float epilogue may fuse
     differently between jitted and eager graphs)."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
-    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group, path=path)
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group,
+                      backend=backend)
     p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 128), jnp.float32)
     np.testing.assert_array_equal(
         np.asarray(linear_apply(p, x, cfg)),
-        np.asarray(linear_apply(p, x, cfg.with_(path="int_dot"))))
+        np.asarray(linear_apply(p, x, cfg.with_(backend="int_dot"))))
 
-    def f(pp):
+    def f(bk):
         return jax.jit(jax.vmap(
-            lambda xi: linear_apply(p, xi, cfg.with_(path=pp))))(x)
-    np.testing.assert_array_equal(np.asarray(f(path)),
+            lambda xi: linear_apply(p, xi, cfg.with_(backend=bk))))(x)
+    np.testing.assert_array_equal(np.asarray(f(backend)),
                                   np.asarray(f("int_dot")))
 
 
 def test_engine_jit_jaxpr_has_no_pure_callback():
     """The acceptance smoke: engine_jit lowers callback-free; the host
-    engine path (the retired hot path) still lowers *with* one."""
+    engine backend (the retired hot path) still lowers *with* one."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
     cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
-                      path="engine_jit")
+                      backend="engine_jit")
     p = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
     assert "pure_callback" not in str(
         jax.make_jaxpr(lambda xi: linear_apply(p, xi, cfg))(x))
     assert "pure_callback" in str(
         jax.make_jaxpr(
-            lambda xi: linear_apply(p, xi, cfg.with_(path="engine")))(x))
+            lambda xi: linear_apply(p, xi,
+                                    cfg.with_(backend="engine")))(x))
 
 
 def test_engine_jit_traced_weights_need_attached_plan():
     """Without an embedded plan, a traced weight is a loud error — not a
-    silent fallback to a callback."""
+    silent fallback to a callback — and the error names the registry
+    backends that do handle traced weights plus the attach remedy."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
     cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0,
-                      path="engine_jit")
+                      backend="engine_jit")
     p = linear_init(jax.random.PRNGKey(0), 32, 8, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32), jnp.float32)
-    with pytest.raises(ValueError, match="attach"):
+    with pytest.raises(ValueError, match="attach_device_plans") as ei:
         jax.jit(lambda pp, xi: linear_apply(pp, xi, cfg))(p, x)
+    # the remedy message lists the backends that need no attachment (the
+    # fallback segment after the colon — "engine" alone would also match
+    # the "backend 'engine_jit'" prefix)
+    fallback = str(ei.value).rsplit("without attachment:", 1)[-1]
+    for name in ("int_dot", "lut", "pallas", "engine"):
+        assert name in fallback.split(".")[0].replace(" ", "").split(",")
 
 
 # -- kernels/ops.py padding paths (non-divisible M/N/K) ---------------------

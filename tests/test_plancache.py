@@ -3,7 +3,7 @@
 Covers the ISSUE-2 acceptance surface: hit/miss/eviction/invalidation
 counters, invalidation when ``qw`` changes, bit-exactness of cached vs
 freshly-planned outputs (incl. the single-batched-plan grouped path), the
-offline ``precompile`` pytree walk, and ``path="engine"`` under ``jit`` +
+offline ``precompile`` pytree walk, and ``backend="engine"`` under ``jit`` +
 ``vmap``.
 """
 import numpy as np
@@ -37,7 +37,8 @@ def test_hit_miss_counters(rng):
     p2 = c.get_or_build(w, 4, 8)
     assert p1 is p2
     assert c.stats() == {"hits": 1, "misses": 1, "evictions": 0,
-                         "invalidations": 0, "size": 1, "capacity": 256}
+                         "invalidations": 0, "size": 1, "capacity": 256,
+                         "backends": {}}
     # a different (bits, t) is a different plan for the same bytes
     c.get_or_build(w, 4, 4)
     assert c.stats()["misses"] == 2 and len(c) == 2
@@ -131,20 +132,21 @@ def test_grouped_plan_single_batched_build(rng):
                      x.reshape(G, g, m).astype(np.int64))
     np.testing.assert_array_equal(part, want)
     assert c.stats() == {"hits": 0, "misses": 1, "evictions": 0,
-                         "invalidations": 0, "size": 1, "capacity": 256}
+                         "invalidations": 0, "size": 1, "capacity": 256,
+                         "backends": {}}
 
 
 # -- the serving path (qlinear callbacks) -----------------------------------
 
 @pytest.mark.parametrize("group", [0, 64])
 def test_engine_path_uses_cache(cache, group):
-    """linear_apply path="engine" plans once per weight, then run-only —
+    """linear_apply backend="engine" plans once per weight, then run-only —
     including the grouped case (one batched plan, not one per group)."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
     cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=group,
-                      path="engine")
+                      backend="engine")
     p = linear_init(jax.random.PRNGKey(0), 128, 24, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
     y0 = linear_apply(p, x, cfg)
@@ -152,13 +154,13 @@ def test_engine_path_uses_cache(cache, group):
         linear_apply(p, x, cfg)
     s = cache.stats()
     assert s["misses"] == 1 and s["hits"] == 2
-    y_int = linear_apply(p, x, cfg.with_(path="int_dot"))
+    y_int = linear_apply(p, x, cfg.with_(backend="int_dot"))
     np.testing.assert_array_equal(np.asarray(y0), np.asarray(y_int))
 
 
 @pytest.mark.parametrize("group", [0, 64])
 def test_engine_path_under_jit_vmap(cache, group):
-    """path="engine" composes with jit + vmap and matches int_dot there."""
+    """backend="engine" composes with jit + vmap, matches int_dot there."""
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
@@ -168,7 +170,7 @@ def test_engine_path_under_jit_vmap(cache, group):
 
     def f(path):
         return jax.jit(jax.vmap(
-            lambda xi: linear_apply(p, xi, cfg.with_(path=path))))(x)
+            lambda xi: linear_apply(p, xi, cfg.with_(backend=path))))(x)
     np.testing.assert_array_equal(np.asarray(f("engine")),
                                   np.asarray(f("int_dot")))
     assert cache.stats()["misses"] == 1
@@ -182,7 +184,7 @@ def test_precompile_walks_nested_and_stacked_params(cache):
     import jax
     import jax.numpy as jnp
     from repro.quant import QuantConfig, linear_init, linear_apply
-    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64, path="engine")
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64, backend="engine")
     flat = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
     stacked = jax.vmap(lambda k: linear_init(k, 128, 16, cfg))(
         jax.random.split(jax.random.PRNGKey(1), 3))
@@ -210,7 +212,7 @@ def test_model_precompile_plans_end_to_end(cache):
     from repro.launch.specs import serve_config
     from repro.models.model import Model
 
-    cfg = serve_config(get_reduced("smollm-135m"), w_bits=4, path="engine")
+    cfg = serve_config(get_reduced("smollm-135m"), w_bits=4, backend="engine")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     stats = model.precompile_plans(params)
@@ -325,7 +327,7 @@ def test_attach_device_plans_stacked_and_flat(cache):
     from repro.core.plancache import attach_device_plans
     from repro.quant import QuantConfig, linear_init
     cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64,
-                      path="engine_jit")
+                      backend="engine_jit")
     flat = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
     stacked = jax.vmap(lambda k: linear_init(k, 128, 16, cfg))(
         jax.random.split(jax.random.PRNGKey(1), 3))
@@ -350,7 +352,7 @@ def test_model_attach_device_plans_end_to_end(cache):
     from repro.models.model import Model
 
     cfg = serve_config(get_reduced("smollm-135m"), w_bits=4,
-                       path="engine_jit")
+                       backend="engine_jit")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     stats = model.precompile_plans(params)
@@ -370,7 +372,7 @@ def test_model_attach_device_plans_end_to_end(cache):
 
     # bit-exact with the int_dot reference model on the same params
     cfg_i = serve_config(get_reduced("smollm-135m"), w_bits=4,
-                         path="int_dot")
+                         backend="int_dot")
     logits_i, _ = jax.jit(lambda p, b: Model(cfg_i).prefill(p, b, 8))(
         params, batch)
     np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_i))
@@ -402,7 +404,7 @@ def test_precompile_reserves_capacity(cache):
     warmup: precompile grows the cache before building."""
     import jax
     from repro.quant import QuantConfig, linear_init
-    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0, path="engine")
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=0, backend="engine")
     small = PlanCache(capacity=2)
     stacked = jax.vmap(lambda k: linear_init(k, 32, 8, cfg))(
         jax.random.split(jax.random.PRNGKey(0), 5))

@@ -35,9 +35,9 @@ def test_linear_paths_agree(group, w_bits):
     cfg = QuantConfig(mode="ptq", w_bits=w_bits, a_bits=8, group=group)
     p = linear_init(jax.random.PRNGKey(0), 256, 96, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 7, 256), jnp.float32)
-    y_int = linear_apply(p, x, cfg.with_(path="int_dot"))
-    y_lut = linear_apply(p, x, cfg.with_(path="lut"))
-    y_pal = linear_apply(p, x, cfg.with_(path="pallas"))
+    y_int = linear_apply(p, x, cfg.with_(backend="int_dot"))
+    y_lut = linear_apply(p, x, cfg.with_(backend="lut"))
+    y_pal = linear_apply(p, x, cfg.with_(backend="pallas"))
     np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_lut),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_pal),
