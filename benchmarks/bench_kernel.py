@@ -15,7 +15,11 @@ is then skipped (CI runs the two as separate steps). The serving bench
 enumerates the **backend registry** (core/backend.py) — one keyed entry
 per backend under ``"backends"`` in the JSON (e.g.
 ``engine_jit.device_decode_us``) — so the perf trajectory distinguishes
-backends instead of overwriting one flat dict.
+backends instead of overwriting one flat dict. Device-resident backends
+additionally get a ``mesh_decode_us`` series: the same decode through the
+multi-device serve cell (batch sharded ``P("data")``, DevicePlans placed
+on the mesh) over the largest data extent that divides the decode batch —
+1 on a plain host, 4 in the CI forced-multi-device leg.
 """
 from __future__ import annotations
 
@@ -224,6 +228,39 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
                           "decode_us")
             entry[decode_key] = us_decode
             entry["per_call_us"] = us_decode / calls
+
+            if b.device_resident:
+                # the multi-device serve cell's decode: batch sharded
+                # P("data") over the widest data extent dividing it, plan
+                # leaves placed on the mesh (replicated — the serve-cell
+                # default). On a plain 1-device host the extent is 1 (the
+                # code path still runs end-to-end); the CI forced-multi-
+                # device leg produces the real N-way number.
+                from jax.sharding import (Mesh, NamedSharding,
+                                          PartitionSpec as P)
+                from repro.core.backend import shard_device_plan
+                mesh_n = max(d for d in
+                             range(1, min(len(jax.devices()), m) + 1)
+                             if m % d == 0)
+                mesh = Mesh(np.asarray(jax.devices()[:mesh_n]), ("data",))
+                mdplans = [shard_device_plan(d, mesh) if d is not None
+                           else None for d in dplans]
+                xs_mesh = [jax.device_put(
+                    qx, NamedSharding(mesh, P("data", None)))
+                    for qx in xs_row]
+                mfns = [jax.jit(lambda a, _b=b, _w=qws[i], _p=plans[i],
+                                _d=mdplans[i]: _b.execute(a, _w, _p, _d,
+                                                          ecfg))
+                        for i in range(layers)]
+                for i, f in enumerate(mfns):
+                    np.testing.assert_array_equal(
+                        np.asarray(f(xs_mesh[0])), wants0[i])
+                t0 = time.perf_counter()
+                for qx in xs_mesh:
+                    for f in mfns:
+                        jax.block_until_ready(f(qx))
+                entry["mesh_decode_us"] = (time.perf_counter() - t0) * 1e6
+                entry["mesh_devices"] = mesh_n
             result["backends"][name] = entry
     finally:
         PC.set_default_cache(prev)

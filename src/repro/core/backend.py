@@ -132,6 +132,21 @@ class TransitiveBackend:
         device lowering return None."""
         return None
 
+    def plan_specs(self, mesh):
+        """How this backend's DevicePlan leaves are placed on ``mesh``.
+
+        The serve path (``plancache.attach_device_plans`` /
+        ``Model.attach_device_plans``) consults this when the caller gives
+        a mesh but no explicit ``specs`` — the capability-keyed default
+        placement. The base default replicates (``None``): plans are small
+        index arrays, and data-parallel decode needs every device to hold
+        every layer's plan. A backend whose lowering is sharded (say a TPU
+        forest kernel splitting output rows over ``"model"``) overrides
+        this to return a single ``PartitionSpec`` or a
+        ``{leaf-field: PartitionSpec}`` mapping
+        (:func:`shard_device_plan`'s forms)."""
+        return None
+
     def execute(self, x: jnp.ndarray, w: jnp.ndarray,
                 plan: ExecutionPlan | None, dplan: DevicePlan | None,
                 cfg: EngineConfig) -> jnp.ndarray:

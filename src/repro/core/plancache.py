@@ -477,7 +477,9 @@ def attach_device_plans(params: Any, cfg: Any,
     embedded plan's leaves are placed under ``specs``
     (:func:`~repro.core.backend.shard_device_plan`) — e.g.
     ``specs=P("data")`` shards the stacked leading axis across the mesh for
-    multi-device serving.
+    multi-device serving. When ``specs`` is omitted the placement is
+    capability-keyed: the backend's own ``plan_specs(mesh)`` hook decides
+    (built-ins replicate — the data-parallel serve-cell default).
 
     Host ExecutionPlans are built through ``cache`` (default: process
     cache), so a preceding :func:`precompile` warmup is reused, not
@@ -500,6 +502,8 @@ def attach_device_plans(params: Any, cfg: Any,
             f"backend '{b.name}' does not execute from device plans; "
             f"attach_device_plans serves device-resident planned backends "
             f"(e.g. engine_jit, engine_pallas)")
+    if mesh is not None and specs is None:
+        specs = b.plan_specs(mesh)
     w_bits, t = _plan_knobs(cfg)
     # size the cache to the model before building, like precompile: the
     # attach walk must not LRU-evict its own (or a prior warmup's) plans

@@ -14,16 +14,50 @@ Logical axes:
 ``shard(x, *logical_axes)`` applies a sharding constraint only when a mesh
 with the needed axis names is ambient (jit under ``with mesh:``) and the
 dimension is divisible — so the same model code runs on 1 CPU device in
-tests and on the 512-chip production mesh in the dry-run.
+tests and on the 512-chip production mesh in the dry-run. Dropping an axis
+for non-divisibility is legal but no longer silent: the first time a given
+(logical axis, mesh extent, dim) combination replicates instead of
+sharding, :func:`spec` emits a ``ShardingDropWarning`` — a serve cell that
+meant to split its batch 4 ways but quietly ran 4 replicated copies is
+exactly the failure mode the warning exists for.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat
 
-__all__ = ["RULES", "spec", "shard", "mesh_axis_size"]
+__all__ = ["RULES", "ShardingDropWarning", "spec", "shard",
+           "mesh_axis_size"]
+
+
+class ShardingDropWarning(UserWarning):
+    """A sharding rule's mesh axes were dropped (replicated) because the
+    mesh extent does not divide the dimension."""
+
+
+# (logical axis, mesh axes, dim, extent) combinations already warned about —
+# spec() runs on every layer of every step, the warning must fire once
+_WARNED_DROPS: set[tuple] = set()
+
+
+def _warn_drop(name: str, mesh_axes: tuple[str, ...], dim: int,
+               size: int) -> None:
+    key = (name, mesh_axes, dim, size)
+    if key in _WARNED_DROPS:
+        return
+    _WARNED_DROPS.add(key)
+    axes = "+".join(mesh_axes)
+    product = " (product of present axes)" if len(mesh_axes) > 1 else ""
+    warnings.warn(
+        f"sharding rule '{name}' -> mesh axes {mesh_axes} dropped: "
+        f"dim {dim} is not divisible by the mesh extent {size} of "
+        f"{axes}{product}; the dimension is REPLICATED on every device. "
+        f"Pad the dimension or resize the mesh to actually shard it.",
+        ShardingDropWarning, stacklevel=3)
 
 RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -50,13 +84,18 @@ def mesh_axis_size(name: str) -> int:
     return m.shape[name]
 
 
-def spec(*logical_axes: str | None, shape: tuple[int, ...] | None = None) -> P:
+def spec(*logical_axes: str | None, shape: tuple[int, ...] | None = None,
+         mesh=None) -> P:
     """PartitionSpec from logical axis names (None → replicated dim).
 
     When ``shape`` is given, axes whose mesh extent does not divide the dim
     are dropped (replicated) — e.g. 8 GQA kv heads on a 16-way model axis.
+    For multi-axis rules (``batch`` → ``("pod", "data")``) the *product* of
+    the present axes must divide. A drop emits a ``ShardingDropWarning``
+    once per (rule, extent, dim) — replication is a legal fallback, not a
+    silent one. ``mesh`` defaults to the ambient mesh.
     """
-    m = _ambient_mesh()
+    m = _ambient_mesh() if mesh is None else mesh
     parts = []
     for i, name in enumerate(logical_axes):
         if name is None or name == "none":
@@ -67,13 +106,14 @@ def spec(*logical_axes: str | None, shape: tuple[int, ...] | None = None) -> P:
         if not mesh_axes:
             parts.append(None)
             continue
-        if shape is not None:
-            size = 1
-            for a in mesh_axes:
-                size *= m.shape[a]
-            if shape[i] % size:
-                parts.append(None)
-                continue
+        size = 1
+        for a in mesh_axes:
+            size *= dict(m.shape)[a]
+        if shape is not None and shape[i] % size:
+            if size > 1:
+                _warn_drop(name, mesh_axes, shape[i], size)
+            parts.append(None)
+            continue
         parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
     return P(*parts)
 

@@ -21,6 +21,14 @@ backend's declared capabilities:
     so the block scan slices them alongside the weights — decode runs
     pure JAX with zero host callbacks.
 
+``--mesh data=N`` serves on a device mesh — the multi-device serve cell:
+the batch is sharded ``P("data")`` end-to-end through prefill + decode
+(``greedy_generate(mesh=)``), and device-resident backends attach their
+DevicePlans placed on the mesh (replicated by default — each backend's
+``plan_specs`` capability hook decides). Tokens are bit-identical to the
+1-device run. On a CPU host, fake the devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI smoke).
+
 ``--path`` is the deprecated spelling of ``--backend``.
 """
 from __future__ import annotations
@@ -35,7 +43,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
 from repro.core.backend import get_backend, list_backends
-from repro.launch.specs import serve_config
+from repro.launch.mesh import make_serve_mesh
+from repro.launch.specs import mesh_decode_report, serve_config
 from repro.models.model import Model
 from repro.train.serve_step import greedy_generate
 
@@ -53,6 +62,11 @@ def main():
     ap.add_argument("--path", default=None, choices=list_backends(),
                     help="DEPRECATED alias for --backend")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="AXIS=N[,AXIS=N]",
+                    help="serve on a device mesh, e.g. 'data=4' — batch "
+                    "sharded P('data') through prefill+decode, DevicePlans "
+                    "attached on the mesh (CPU: set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline comparison)")
     ap.add_argument("--no-precompile", action="store_true",
@@ -67,6 +81,8 @@ def main():
                       DeprecationWarning)
         name = args.path if args.backend is None else name
     backend = get_backend(name)
+
+    mesh = make_serve_mesh(args.mesh) if args.mesh else None
 
     base = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = base if args.fp else serve_config(base, w_bits=args.w_bits,
@@ -88,9 +104,11 @@ def main():
         if device_path:
             # device-resident backends need plans as traced data inside the
             # block scan; attach builds any still-missing plan through the
-            # same cache
+            # same cache. With a mesh the plan leaves are placed on it —
+            # the backend's plan_specs hook decides the layout (built-ins
+            # replicate: every device runs every layer on its batch shard).
             t0 = time.time()
-            params = model.attach_device_plans(params)
+            params = model.attach_device_plans(params, mesh=mesh)
             t_attach = time.time() - t0
 
     key = jax.random.PRNGKey(1)
@@ -103,12 +121,16 @@ def main():
 
     max_len = args.prompt_len + args.gen + 8
     t0 = time.time()
+    # n_steps is the number of generated tokens (prefill argmax + gen-1
+    # decode steps — the explicit greedy_generate contract)
     toks = greedy_generate(model, params, batch, max_len=max_len,
-                           n_steps=args.gen)
+                           n_steps=args.gen, mesh=mesh)
     dt = time.time() - t0
     mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{name}"
     print(f"[{cfg.name} | {mode}] generated {args.batch}x{args.gen} tokens "
           f"in {dt:.2f}s")
+    if mesh is not None:
+        print(mesh_decode_report(mesh, args.batch, args.gen, dt))
     if planned:
         s = cache.stats()
         attach = (f" + device-plan attach {t_attach:.2f}s"

@@ -18,7 +18,7 @@ from repro.optim import AdamW
 from repro.quant import QuantConfig
 
 __all__ = ["serve_config", "train_cell_specs", "serve_cell_specs",
-           "named", "cache_specs"]
+           "named", "cache_specs", "mesh_decode_report"]
 
 
 def serve_config(cfg: ModelConfig, w_bits: int = 4,
@@ -47,6 +47,32 @@ def serve_config(cfg: ModelConfig, w_bits: int = 4,
 
 def named(mesh, spec_tree):
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree)
+
+
+def mesh_decode_report(mesh, batch: int, n_tokens: int, dt: float) -> str:
+    """One-line per-device decode summary for the mesh serve cell.
+
+    ``dt`` is wall time for ``batch`` sequences x ``n_tokens`` greedy
+    tokens — prefill and first-call jit compile included, so this is the
+    end-to-end number, not steady-state decode (that lives in
+    ``bench_kernel --serve-bench``'s per-backend ``mesh_decode_us``).
+    Under data parallelism wall time is shared by all devices; the line
+    additionally says how many batch rows each device carried (or that
+    the batch replicated — the extent did not divide)."""
+    shape = dict(mesh.shape)
+    dp = _axis_size(mesh, _batch_axes(mesh))
+    axes = ",".join(f"{a}={s}" for a, s in shape.items())
+    if dp > 1 and batch % dp == 0:
+        rows = f"{batch // dp} batch rows/device"
+    elif dp > 1:
+        rows = f"batch {batch} REPLICATED ({dp} does not divide it)"
+    else:
+        rows = "no data axes > 1"
+    per_tok_ms = dt / max(n_tokens, 1) * 1e3
+    return (f"[mesh] {axes} ({mesh.devices.size} devices) | {rows} | "
+            f"{batch}x{n_tokens} tokens in {dt:.2f}s "
+            f"({per_tok_ms:.1f} ms/token wall incl. prefill+compile; "
+            f"steady-state: bench mesh_decode_us)")
 
 
 def _batch_axes(mesh) -> tuple[str, ...]:

@@ -244,6 +244,19 @@ class Model:
         return (lse - ll).mean()
 
     # ---- serve -------------------------------------------------------------
+    @staticmethod
+    def _shard_cache_batch(tree, axis: int):
+        """Batch-dim sharding constraint on every cache leaf (no-op without
+        an ambient mesh). Caches are created inside the prefill jit; the
+        constraint keeps them data-sharded from the first write, so the
+        mesh serve cell never materialises a replicated KV cache and the
+        donated decode buffers keep a stable sharding across steps."""
+        def one(a):
+            axes: list[str | None] = [None] * a.ndim
+            axes[axis] = "batch"
+            return shard(a, *axes)
+        return jax.tree.map(one, tree)
+
     def init_cache(self, batch: int, max_len: int):
         cfg = self.cfg
         if cfg.max_target_positions:
@@ -269,11 +282,13 @@ class Model:
             return jax.tree.map(
                 lambda a: jnp.zeros((cfg.n_repeats,) + a.shape, a.dtype),
                 tree)
-        caches = {"body": {f"c{i}": stack(one(kind))
-                           for i, kind in enumerate(self.pattern)}}
+        caches = {"body": self._shard_cache_batch(
+            {f"c{i}": stack(one(kind))
+             for i, kind in enumerate(self.pattern)}, axis=1)}
         if cfg.block_tail:
-            caches["tail"] = {f"c{i}": one(kind)
-                              for i, kind in enumerate(cfg.block_tail)}
+            caches["tail"] = self._shard_cache_batch(
+                {f"c{i}": one(kind)
+                 for i, kind in enumerate(cfg.block_tail)}, axis=0)
         return caches
 
     def prefill(self, params: Params, batch: dict, max_len: int):

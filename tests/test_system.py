@@ -65,7 +65,11 @@ def test_generation_roundtrip(tiny_cfg):
     model = Model(tiny_cfg.replace(dtype=jnp.float32))
     params = model.init(jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    # n_steps is the number of generated tokens (the explicit PR-5
+    # contract: prefill argmax + n_steps-1 decode steps; 0 = none)
     toks = greedy_generate(model, params, batch, max_len=32, n_steps=5)
     assert toks.shape == (2, 5)
     assert (np.asarray(toks) >= 0).all()
     assert (np.asarray(toks) < tiny_cfg.vocab).all()
+    assert greedy_generate(model, params, batch, max_len=32,
+                           n_steps=0).shape == (2, 0)
