@@ -113,6 +113,79 @@ def run(smoke: bool = False):
          "smoke" if smoke else "ok")
 
 
+def serve_engine_bench(smoke: bool = False, backend: str = "engine_jit",
+                       mesh=None) -> dict:
+    """Continuous-batching throughput/latency series (repro.serve).
+
+    Drives the paged-KV :class:`ServeEngine` over staggered arrivals with
+    shared prompt prefixes on the reduced smollm config and reports
+    aggregate tokens/s, per-request TTFT/latency, and a per-step
+    cumulative-token series — the request-level counterpart of the
+    per-backend GEMM decode series. Lands under ``"serve_engine"`` in
+    BENCH_engine.json (``serve_engine.tokens_per_s`` is the trajectory
+    key)."""
+    from repro.configs import get_reduced
+    from repro.core.backend import get_backend
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+    from repro.serve import ServeEngine
+
+    cfg = serve_config(get_reduced("smollm_135m").replace(
+        n_layers=2 if smoke else 4), backend=backend)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = get_backend(backend)
+    if b.needs_plan:
+        model.precompile_plans(params)
+        if b.device_resident:
+            params = model.attach_device_plans(params, mesh=mesh)
+    rng = np.random.default_rng(3)
+    plen, gen, n_req = (8, 4, 4) if smoke else (16, 16, 8)
+    base = rng.integers(0, cfg.vocab, size=plen).tolist()
+    # every other request extends the shared base prompt — the prefix trie
+    # should serve those pages instead of re-prefilling them
+    prompts = [list(base) if i % 2 == 0 else
+               base[:plen // 2] + rng.integers(
+                   0, cfg.vocab, size=plen - plen // 2).tolist()
+               for i in range(n_req)]
+    page_size = 4
+    max_len = -(-(plen + gen) // page_size) * page_size
+    eng = ServeEngine(model, params, n_slots=2 if smoke else 4,
+                      max_len=max_len, page_size=page_size, mesh=mesh)
+    series = []
+    submitted = host_step = 0
+    arrive_every = 2                        # staggered arrivals
+    t0 = time.perf_counter()
+    while submitted < n_req or eng.queue or eng.active:
+        if submitted < n_req and host_step >= submitted * arrive_every:
+            eng.submit(prompts[submitted], gen)
+            submitted += 1
+        eng.step()
+        host_step += 1
+        done = (sum(len(r.out) for r in eng.finished)
+                + sum(len(r.out) for r in eng.active.values()))
+        series.append({"t_s": time.perf_counter() - t0, "tokens": done})
+    rep = eng.report()
+    emit("serve_engine", rep["wall_s"] * 1e6,
+         f"{backend}: {rep['n_requests']} reqs x {gen} tokens "
+         f"(prompt {plen}) staggered -> {rep['tokens_per_s']:.1f} tok/s "
+         f"(prefix hits={rep['counters']['prefix_hits']} "
+         f"pages shared={rep['counters']['pages_shared']} "
+         f"prefill skipped={rep['counters']['prefill_skipped']})")
+    return {"backend": backend, "prompt_len": plen, "gen": gen,
+            "n_requests": rep["n_requests"],
+            "total_tokens": rep["total_tokens"],
+            "wall_s": rep["wall_s"],
+            "tokens_per_s": rep["tokens_per_s"],
+            "ttft_s": [r["ttft_s"] for r in rep["requests"]],
+            "latency_s": [r["latency_s"] for r in rep["requests"]],
+            "series": series,
+            "counters": {k: rep["counters"][k] for k in
+                         ("prefix_hits", "pages_shared", "prefill_skipped",
+                          "prefill_computed", "decode_steps",
+                          "admitted", "completed")}}
+
+
 def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
                 backends=None):
     """Cached vs uncached serving + a per-backend decode series.
@@ -272,6 +345,10 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
             f"a backend series re-planned: {cache.stats()} "
             f"(expected misses={layers})")
     result["cache"] = cache.stats()
+
+    # continuous-batching engine: request-level throughput next to the
+    # GEMM-level decode series (acceptance key: serve_engine.tokens_per_s)
+    result["serve_engine"] = serve_engine_bench(smoke=smoke)
 
     # legacy flat aliases for the PR-2/PR-3 trajectory keys
     eng_e = result["backends"].get("engine", {})

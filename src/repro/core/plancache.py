@@ -82,6 +82,16 @@ class _Entry:
     device: dict[Any, Any] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class _Pending:
+    """An in-flight plan build: the first thread to miss a key builds the
+    plan OUTSIDE the cache lock; concurrent lookups of the same key wait
+    on ``event`` instead of re-building (or blocking every other key)."""
+    event: threading.Event
+    entry: "_Entry | None" = None
+    error: BaseException | None = None
+
+
 def weight_fingerprint(qw: np.ndarray) -> str:
     """Content hash of a quantized weight (shape + dtype + bytes)."""
     a = np.ascontiguousarray(np.asarray(qw))
@@ -150,6 +160,7 @@ class PlanCache:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._plans: OrderedDict[PlanKey, _Entry] = OrderedDict()
+        self._pending: dict[PlanKey, _Pending] = {}
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
@@ -171,40 +182,85 @@ class PlanCache:
     def _entry(self, qw: np.ndarray, cfg: EngineConfig,
                version: Hashable | None,
                backend: str | None = None) -> _Entry:
-        """Shared lookup/build path; counts one hit or one miss."""
+        """Shared lookup/build path; counts one hit or one miss.
+
+        The lock only guards the map + counters. Canonicalisation,
+        fingerprinting and the plan build itself all run OUTSIDE it — a
+        cold build (seconds for a large weight) must not stall concurrent
+        hot-path lookups from XLA callback threads. Concurrent misses of
+        the *same* key coalesce on a :class:`_Pending` slot: exactly one
+        thread builds (counted as the miss), the rest wait on its event
+        and count as hits — ``misses == distinct weights`` and
+        ``hits + misses == lookups`` stay true under any interleaving.
+        """
         qw = np.asarray(qw)
         if qw.ndim != 2:
             raise ValueError(f"qw must be 2-D (N, K), got {qw.shape}")
         sig = cfg.key()
-        with self._lock:
-            fp = None
-            if version is not None:
-                # fast key: the weight array is not even scanned on a hit
-                key = ("v", version) + sig
-            else:
-                # canonical values (any dtype -> one key), then hash
-                qw = _canonical(qw)
-                fp = weight_fingerprint(qw)
-                key = ("fp", fp) + sig
-            entry = self._plans.get(key)
-            if entry is not None:
-                self._count(backend, "hits")
-                self._plans.move_to_end(key)
-                return entry
+        fp = None
+        if version is not None:
+            # fast key: the weight array is not even scanned on a hit
+            key = ("v", version) + sig
+        else:
+            # canonical values (any dtype -> one key), then hash
+            qw = _canonical(qw)
+            fp = weight_fingerprint(qw)
+            key = ("fp", fp) + sig
+        while True:
+            builder = False
+            with self._lock:
+                entry = self._plans.get(key)
+                if entry is not None:
+                    self._count(backend, "hits")
+                    self._plans.move_to_end(key)
+                    return entry
+                pending = self._pending.get(key)
+                if pending is None:
+                    pending = _Pending(threading.Event())
+                    self._pending[key] = pending
+                    self._count(backend, "misses")
+                    builder = True
+            if builder:
+                return self._build(pending, key, qw, cfg, fp, version)
+            # someone else is building this key: wait off-lock, then
+            # count the coalesced lookup as a hit
+            pending.event.wait()
+            if pending.entry is not None:
+                with self._lock:
+                    self._count(backend, "hits")
+                return pending.entry
+            # the builder failed — loop back and try building ourselves
+            # (its exception already propagated to its own caller)
+
+    def _build(self, pending: _Pending, key: PlanKey, qw: np.ndarray,
+               cfg: EngineConfig, fp: str | None,
+               version: Hashable | None) -> _Entry:
+        """Build a plan outside the lock and publish it (double-checked:
+        the pending slot guarantees no concurrent build of this key)."""
+        try:
             if version is not None:
                 qw = _canonical(qw)        # build path only
-            self._count(backend, "misses")
             plan = BatchedTransitiveEngine(bits=cfg.w_bits, t=cfg.t).plan(
                 qw.astype(np.int64, copy=False), groups=cfg.groups)
             # content hash stored regardless of key scheme: invalidate()
             # finds version-keyed entries by weight content too
             entry = _Entry(plan=plan,
                            fingerprint=fp or weight_fingerprint(qw))
+        except BaseException as e:
+            with self._lock:
+                self._pending.pop(key, None)
+            pending.error = e
+            pending.event.set()
+            raise
+        with self._lock:
             self._plans[key] = entry
+            self._pending.pop(key, None)
             while len(self._plans) > self.capacity:
                 self._plans.popitem(last=False)
                 self.evictions += 1
-            return entry
+        pending.entry = entry
+        pending.event.set()
+        return entry
 
     def get_or_build(self, qw: np.ndarray, cfg, t: int | None = None,
                      groups: int = 1, *, version: Hashable | None = None,

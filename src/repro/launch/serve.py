@@ -29,6 +29,16 @@ DevicePlans placed on the mesh (replicated by default — each backend's
 1-device run. On a CPU host, fake the devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the CI smoke).
 
+``--continuous`` switches from the one-shot batched generate to the
+continuous-batching serve engine (``repro.serve.ServeEngine``): requests
+arrive staggered (``--requests`` of them, one every ``--arrive-every``
+host steps), are admitted into ``--slots`` packed decode slots over a
+paged KV pool (``--page-size`` tokens per page), and prompts sharing a
+prefix share pages through the prefix trie instead of re-prefilling. The
+report prints per-request TTFT/latency, aggregate tokens/s, and the
+prefix-reuse counters. Tokens stay bit-identical to running each request
+alone through the one-shot path.
+
 ``--path`` is the deprecated spelling of ``--backend``.
 """
 from __future__ import annotations
@@ -47,6 +57,57 @@ from repro.launch.mesh import make_serve_mesh
 from repro.launch.specs import mesh_decode_report, serve_config
 from repro.models.model import Model
 from repro.train.serve_step import greedy_generate
+
+
+def _serve_continuous(model, params, cfg, args, mesh, name):
+    """Continuous-batching serve: staggered arrivals through ServeEngine."""
+    from repro.serve import ServeEngine
+
+    ps = args.page_size
+    max_len = -(-(args.prompt_len + args.gen) // ps) * ps
+    eng = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
+                      page_size=ps, mesh=mesh)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab, size=args.prompt_len).tolist()
+    # arrival pattern with real prefix structure: even requests replay the
+    # base prompt (full-prefix hit after the first), odd ones keep only the
+    # first half (partial hit at page granularity)
+    prompts = [list(base) if i % 2 == 0 else
+               base[:args.prompt_len // 2] + rng.integers(
+                   0, cfg.vocab,
+                   size=args.prompt_len - args.prompt_len // 2).tolist()
+               for i in range(args.requests)]
+    submitted = host_step = 0
+    t0 = time.time()
+    while submitted < args.requests or eng.queue or eng.active:
+        if (submitted < args.requests
+                and host_step >= submitted * args.arrive_every):
+            eng.submit(prompts[submitted], args.gen)
+            submitted += 1
+        eng.step()
+        host_step += 1
+    dt = time.time() - t0
+    rep = eng.report()
+    mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{name}"
+    print(f"[{cfg.name} | {mode} | continuous] {rep['n_requests']} requests "
+          f"x {args.gen} tokens (staggered every {args.arrive_every} steps, "
+          f"{args.slots} slots, page_size={ps}) in {dt:.2f}s -> "
+          f"{rep['tokens_per_s']:.1f} tok/s")
+    for r in rep["requests"]:
+        print(f"  req {r['rid']}: prompt={r['prompt_len']} "
+              f"tokens={r['n_tokens']} shared_pages={r['shared_pages']} "
+              f"prefill_computed={r['prefill_computed']} "
+              f"ttft={r['ttft_s'] * 1e3:.1f}ms "
+              f"latency={r['latency_s'] * 1e3:.1f}ms")
+    c = rep["counters"]
+    print(f"[prefix reuse] hits={c['prefix_hits']} "
+          f"pages_shared={c['pages_shared']} "
+          f"prefill_skipped={c['prefill_skipped']} "
+          f"prefill_computed={c['prefill_computed']} | "
+          f"pages={c['pages']} trie={c['trie']}")
+    for r in eng.finished:
+        print(f"  req {r.rid}: {r.tokens}")
+    return eng
 
 
 def main():
@@ -69,6 +130,18 @@ def main():
                     "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--fp", action="store_true",
                     help="serve unquantized (baseline comparison)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching through the paged-KV serve "
+                    "engine: staggered request arrivals, packed decode "
+                    "slots, prefix-trie page sharing")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="(--continuous) number of requests to submit")
+    ap.add_argument("--arrive-every", type=int, default=2,
+                    help="(--continuous) host steps between arrivals")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="(--continuous) tokens per KV page")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="(--continuous) packed decode batch slots")
     ap.add_argument("--no-precompile", action="store_true",
                     help="skip the offline plan warmup (planned backends "
                     "only; plans then build lazily on first forward per "
@@ -110,6 +183,17 @@ def main():
             t0 = time.time()
             params = model.attach_device_plans(params, mesh=mesh)
             t_attach = time.time() - t0
+
+    if args.continuous:
+        reason = model.supports_paged()
+        if reason is not None:
+            ap.error(f"--continuous needs the paged serve path: {reason}")
+        _serve_continuous(model, params, cfg, args, mesh, name)
+        if planned:
+            s = cache.stats()
+            print(f"[plan cache] offline plan-build {t_plan:.2f}s | "
+                  f"misses={s['misses']} hits={s['hits']}")
+        return
 
     key = jax.random.PRNGKey(1)
     batch = {"tokens": jax.random.randint(

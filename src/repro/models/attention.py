@@ -52,6 +52,20 @@ def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
     return jnp.repeat(k, groups, axis=2)
 
 
+def _quantize_kv(t: jnp.ndarray):
+    """KV8 cache quantization, pinned to float32 arithmetic.
+
+    The per-token scale is max|t|/127 — computed in bf16 its final
+    division may or may not keep the bf16 rounding depending on how XLA
+    fuses it into the float32 cache store, so two programs writing the
+    same K/V row (the dense prefill and the paged serve prefill) could
+    store different scale bytes. Quantizing from f32 makes the stored
+    (int8, scale) pair a pure function of the row values, program-shape
+    independent — the bit-identity contract of repro.serve rests on it.
+    """
+    return quantize_per_token(t.astype(jnp.float32))
+
+
 def _scores(q, k, scale, quant: bool):
     """einsum('bqhd,bkhd->bhqk'), optionally with dynamic-int8 operands —
     the TPU mapping of the paper's dynamic-scoreboard attention (Sec. 5.7:
@@ -125,6 +139,77 @@ def attend_chunked(q, k, v, scale, causal: bool, window: int,
     _, outs = jax.lax.scan(jax.checkpoint(body), None,
                            (qc, jnp.arange(nc)), unroll=ATTN_UNROLL)
     return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)  # (B, Sq, H, D)
+
+
+def attend_cached(q, ck, cv, cks, cvs, valid, cfg: ModelConfig, scale,
+                  sshard=None):
+    """Decode-step attention against a contiguous (B, S, KV, D) cache view.
+
+    q (B, Sq, H, D); ck/cv the cached keys/values — int8 with cks/cvs
+    per-position scales for the KV8 layout, else the working dtype; valid
+    (B', S) bool with B' in {1, B} — False keys are masked to NEG_INF.
+    Grouped-head attention: the contraction runs against the cache directly
+    in (KV, G) layout — no jnp.repeat materialisation of G x the cache
+    (§Perf hillclimb 1, iteration 3). With a KV8 cache (iteration 4) the
+    int8 values + stored scales feed the int GEMM directly. ``sshard``
+    optionally constrains the score layout (the sequence-parallel dense
+    decode path).
+
+    This is the one implementation of cached-decode attention: the dense
+    per-slot cache path AND the paged serve path both call it, so the two
+    stay bit-identical by construction.
+    """
+    b, sq, h, hd = q.shape
+    kv = ck.shape[2]
+    groups = h // kv
+    int8_cache = ck.dtype == jnp.int8
+    qg = q.reshape(b, sq, kv, groups, hd)
+    if cfg.quant_attention:
+        qq, sqs = quantize_per_token(qg)             # (B,1,KV,G,1)
+        if int8_cache:
+            kk, sks = ck, cks
+        else:
+            kk, sks = quantize_per_token(ck)         # (B,S,KV,1)
+        s32 = jnp.einsum("bqkgd,bskd->bkgqs", qq, kk,
+                         preferred_element_type=jnp.int32)
+        sk_b = sks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+        s = (s32.astype(jnp.float32) * scale
+             * jnp.moveaxis(sqs, 1, 3)                # (B,KV,G,1,1)
+             * sk_b)                                  # (B,KV,1,1,S)
+    elif int8_cache:
+        kf = ck.astype(jnp.float32) * cks
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                       kf) * scale
+    else:
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck) \
+            .astype(jnp.float32) * scale
+    if sshard is not None:
+        s = sshard(s)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if cfg.quant_attention:
+        if int8_cache:
+            # fold the per-position V scales into P before quantizing —
+            # the int8 contraction then needs no per-s rescale.
+            vs_b = cvs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+            qp, sps = quantize_per_token(p * vs_b)
+            qv = cv
+            sv_out = 1.0
+        else:
+            qp, sps = quantize_per_token(p)
+            sv = jnp.max(jnp.abs(cv), axis=1, keepdims=True) / 127. + 1e-8
+            qv = jnp.clip(jnp.round(cv / sv), -128, 127).astype(jnp.int8)
+            sv_out = sv[:, :, :, None, :]
+        o32 = jnp.einsum("bkgqs,bskd->bqkgd", qp, qv,
+                         preferred_element_type=jnp.int32)
+        out = (o32.astype(jnp.float32)
+               * jnp.moveaxis(sps, -1, 1) * sv_out)
+    elif int8_cache:
+        vf = cv.astype(jnp.float32) * cvs
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    else:
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cv.dtype), cv)
+    return out.reshape(b, sq, h, hd)
 
 
 # --------------------------------------------------------------------------
@@ -210,8 +295,8 @@ def apply_attn(params, x, cfg: ModelConfig, *, positions, cache=None,
         take = min(size, src_len)
         slots = (jnp.arange(take) + (src_len - take)) % size
         if cache["k"].dtype == jnp.int8:
-            qk, ks = quantize_per_token(k[:, -take:])
-            qv, vs = quantize_per_token(v[:, -take:])
+            qk, ks = _quantize_kv(k[:, -take:])
+            qv, vs = _quantize_kv(v[:, -take:])
             new_cache = {"k": cache["k"].at[:, slots].set(qk),
                          "v": cache["v"].at[:, slots].set(qv),
                          "ks": cache["ks"].at[:, slots].set(ks),
@@ -268,8 +353,8 @@ def apply_attn(params, x, cfg: ModelConfig, *, positions, cache=None,
                 return jax.lax.dynamic_update_slice(
                     buf, val, (0, slot) + (0,) * (buf.ndim - 2))
             if int8_cache:
-                qk_new, ks_new = quantize_per_token(k)
-                qv_new, vs_new = quantize_per_token(v)
+                qk_new, ks_new = _quantize_kv(k)
+                qv_new, vs_new = _quantize_kv(v)
                 ck = cshard(dus(cache["k"], qk_new))
                 cv = cshard(dus(cache["v"], qv_new))
                 cks = cshard(dus(cache["ks"], ks_new.astype(jnp.float32)))
@@ -280,59 +365,190 @@ def apply_attn(params, x, cfg: ModelConfig, *, positions, cache=None,
                 cv = cshard(dus(cache["v"], v.astype(cache["v"].dtype)))
                 new_cache = {"k": ck, "v": cv}
             kv_len = jnp.minimum(step + 1, size)
-        # grouped-head attention: contract against the cache directly in
-        # (KV, G) layout — no jnp.repeat materialisation of G x the cache
-        # (§Perf hillclimb 1, iteration 3). With a KV8 cache (iteration 4)
-        # the int8 values + stored scales feed the int GEMM directly.
-        qg = q.reshape(b, sq, kv, groups, hd)
         valid = jnp.arange(size)[None, :] < kv_len
-        if cfg.quant_attention:
-            qq, sqs = quantize_per_token(qg)             # (B,1,KV,G,1)
-            if int8_cache:
-                kk, sks = ck, cks
-            else:
-                kk, sks = quantize_per_token(ck)         # (B,S,KV,1)
-            s32 = jnp.einsum("bqkgd,bskd->bkgqs", qq, kk,
-                             preferred_element_type=jnp.int32)
-            sk_b = sks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
-            s = (s32.astype(jnp.float32) * scale
-                 * jnp.moveaxis(sqs, 1, 3)                # (B,KV,G,1,1)
-                 * sk_b)                                  # (B,KV,1,1,S)
-        elif int8_cache:
-            kf = ck.astype(jnp.float32) * cks
-            s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
-                           kf) * scale
-        else:
-            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck) \
-                .astype(jnp.float32) * scale
-        if seq_mode:
-            s = shard(s, "batch", None, None, None, "kv_seq")
-        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
-        if cfg.quant_attention:
-            if int8_cache:
-                # fold the per-position V scales into P before quantizing —
-                # the int8 contraction then needs no per-s rescale.
-                vs_b = cvs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
-                qp, sps = quantize_per_token(p * vs_b)
-                qv = cv
-                sv_out = 1.0
-            else:
-                qp, sps = quantize_per_token(p)
-                sv = jnp.max(jnp.abs(cv), axis=1, keepdims=True) / 127. + 1e-8
-                qv = jnp.clip(jnp.round(cv / sv), -128, 127).astype(jnp.int8)
-                sv_out = sv[:, :, :, None, :]
-            o32 = jnp.einsum("bkgqs,bskd->bqkgd", qp, qv,
-                             preferred_element_type=jnp.int32)
-            out = (o32.astype(jnp.float32)
-                   * jnp.moveaxis(sps, -1, 1) * sv_out)
-        elif int8_cache:
-            vf = cv.astype(jnp.float32) * cvs
-            out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
-        else:
-            out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cv.dtype), cv)
-        out = out.reshape(b, sq, h, hd)
+        sshard = ((lambda t: shard(t, "batch", None, None, None, "kv_seq"))
+                  if seq_mode else None)
+        out = attend_cached(q, ck, cv, cks, cvs, valid, cfg, scale,
+                            sshard=sshard)
 
     out = out.reshape(b, sq, h * hd)
     y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
     return y.astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------------
+# Paged KV cache (the continuous-batching serve path, repro.serve)
+# --------------------------------------------------------------------------
+#
+# The pool is a static-shape pytree: (n_pages, page_size, KV, D) K/V buffers
+# (+ per-position scales under KV8) shared by every slot, addressed through
+# an int32 page table — the same static-gather trick DevicePlan uses for
+# forest schedules, so decode is one fixed-shape jit regardless of which
+# requests occupy which slots. Logical position p of a slot lives at
+# (page_indices[slot, p // page_size], p % page_size); page 0 is the null
+# page (never allocated — inactive slots point at it, masked writes land
+# in it).
+
+def init_attn_page_pool(cfg: ModelConfig, n_pages: int, page_size: int):
+    """One attention layer's page pool (unstacked; Model stacks repeats)."""
+    shape = (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_bits == 8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "vs": jnp.zeros(shape[:-1] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def _gather_pages(buf, page_indices):
+    """(n_pages, ps, ...) gathered to a contiguous (B, P*ps, ...) view in
+    logical-position order — position p of slot b lands at index p, so the
+    downstream attention sees exactly the layout the dense cache has."""
+    g = buf[page_indices]                       # (B, P, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def apply_attn_paged_prefill(params, x, cfg: ModelConfig, *, pool,
+                             prefix_page_ids, write_page_ids, write_offs,
+                             write_from: int):
+    """Suffix prefill for ONE request (B=1) against a page pool.
+
+    ``x`` (1, Ls, d) embeds the prompt *suffix*: positions start..L-1 where
+    ``start = len(prefix_page_ids) * page_size`` is the prefix-trie-shared
+    range (0 when nothing is shared). The shared positions' K/V are
+    gathered from the pool — bit-identical to recomputing them when the
+    pool stores the working dtype, which is why the engine only skips
+    computation for exact (non-KV8) pools. Suffix K/V for positions
+    start+write_from..L-1 are written to ``(write_page_ids[i],
+    write_offs[i])`` (``write_from`` > 0 lets a KV8 full-recompute skip
+    re-writing pages it shares). Returns (out, new_pool).
+
+    All lengths and index-array shapes are static: the jit retraces per
+    (suffix_len, n_prefix_pages) pair — decode, by contrast, is a single
+    shape (see :func:`apply_attn_paged_decode`).
+    """
+    from repro.quant import linear_apply
+    qcfg = cfg.quant
+    b, ls, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ps = pool["k"].shape[1]
+    n_pre = len(prefix_page_ids)
+    start = n_pre * ps
+    total = start + ls
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = linear_apply(params["wq"], xn, qcfg).reshape(b, ls, h, hd)
+    k = linear_apply(params["wk"], xn, qcfg).reshape(b, ls, kvh, hd)
+    v = linear_apply(params["wv"], xn, qcfg).reshape(b, ls, kvh, hd)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    q = shard(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    qpos = jnp.broadcast_to(start + jnp.arange(ls), (b, ls))
+    q = rope(q, qpos, cfg.rope_theta, cfg.rope_2d)
+    k = rope(k, qpos, cfg.rope_theta, cfg.rope_2d)
+    scale = hd ** -0.5
+
+    # write the suffix K/V into this request's (private) pages — same
+    # quantization as the dense prefill cache write
+    int8_pool = pool["k"].dtype == jnp.int8
+    new_pool = dict(pool)
+    if int8_pool:
+        qk, ks = _quantize_kv(k)
+        qv, vs = _quantize_kv(v)
+        stores = {"k": qk, "v": qv, "ks": ks, "vs": vs}
+    else:
+        stores = {"k": k, "v": v}
+    for name, val in stores.items():
+        rows = val[0, write_from:].astype(pool[name].dtype)
+        new_pool[name] = pool[name].at[write_page_ids, write_offs].set(rows)
+
+    # full K/V view: gathered shared prefix (exact working-dtype pools
+    # only — the engine guarantees n_pre == 0 for KV8) + in-pass suffix
+    if n_pre:
+        k_pre = pool["k"][prefix_page_ids].reshape(1, start, kvh, hd)
+        v_pre = pool["v"][prefix_page_ids].reshape(1, start, kvh, hd)
+        k_full = jnp.concatenate([k_pre.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([v_pre.astype(v.dtype), v], axis=1)
+    else:
+        k_full, v_full = k, v
+    groups = h // kvh
+    kf = _repeat_kv(k_full, groups)
+    vf = _repeat_kv(v_full, groups)
+    # branch on the TOTAL length, mirroring the dense prefill's threshold
+    # (a shared-prefix suffix must attend the same way the reference
+    # full-prompt pass did)
+    if total > CHUNK_THRESHOLD:
+        out = attend_chunked(q, kf, vf, scale, causal=True, window=0,
+                             q_offset=start)
+    else:
+        kpos = jnp.arange(total)
+        mask = qpos[:, :, None] >= kpos[None, None, :]
+        out = attend_full(q, kf, vf, mask[:, None], scale,
+                          cfg.quant_attention)
+    out = out.reshape(b, ls, h * hd)
+    y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
+    return y.astype(x.dtype), new_pool
+
+
+def apply_attn_paged_decode(params, x, cfg: ModelConfig, *, pool,
+                            page_indices, steps):
+    """One paged decode step over all slots. x (B, 1, d); page_indices
+    (B, P) int32; steps (B,) int32 — the logical position the new token is
+    written at (== tokens held so far). Returns (out, new_pool).
+
+    Inactive slots carry a page table of null pages (page 0) and step 0:
+    their writes land in the null page and their rows are garbage the
+    scheduler never reads — the shapes never change, so decode re-traces
+    exactly once per engine regardless of arrivals/evictions.
+    """
+    from repro.quant import linear_apply
+    qcfg = cfg.quant
+    b, sq, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ps = pool["k"].shape[1]
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = linear_apply(params["wq"], xn, qcfg).reshape(b, sq, h, hd)
+    k = linear_apply(params["wk"], xn, qcfg).reshape(b, sq, kvh, hd)
+    v = linear_apply(params["wv"], xn, qcfg).reshape(b, sq, kvh, hd)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    q = shard(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    pos = steps[:, None].astype(jnp.int32)
+    q = rope(q, pos, cfg.rope_theta, cfg.rope_2d)
+    k = rope(k, pos, cfg.rope_theta, cfg.rope_2d)
+    scale = hd ** -0.5
+
+    # scatter the new K/V row per slot: logical position steps[b] lives at
+    # (page_indices[b, steps[b] // ps], steps[b] % ps)
+    page = jnp.take_along_axis(page_indices, (steps // ps)[:, None],
+                               axis=1)[:, 0]
+    off = steps % ps
+    int8_pool = pool["k"].dtype == jnp.int8
+    if int8_pool:
+        qk, ks = _quantize_kv(k)
+        qv, vs = _quantize_kv(v)
+        stores = {"k": qk, "v": qv, "ks": ks, "vs": vs}
+    else:
+        stores = {"k": k, "v": v}
+    new_pool = dict(pool)
+    for name, val in stores.items():
+        new_pool[name] = pool[name].at[page, off].set(
+            val[:, 0].astype(pool[name].dtype))
+
+    ck = _gather_pages(new_pool["k"], page_indices)
+    cv = _gather_pages(new_pool["v"], page_indices)
+    cks = _gather_pages(new_pool["ks"], page_indices) if int8_pool else None
+    cvs = _gather_pages(new_pool["vs"], page_indices) if int8_pool else None
+    size = ck.shape[1]
+    valid = jnp.arange(size)[None, :] < \
+        jnp.minimum(steps + 1, size)[:, None]
+    out = attend_cached(q, ck, cv, cks, cvs, valid, cfg, scale)
+    out = out.reshape(b, sq, h * hd)
+    y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
+    return y.astype(x.dtype), new_pool

@@ -101,6 +101,35 @@ def _apply_superblock(bp: Params, x, cfg: ModelConfig, pattern, *,
     return x, new_caches
 
 
+def _apply_superblock_paged(bp: Params, x, cfg: ModelConfig, pattern, *,
+                            pool, mode: str, **attn_kw):
+    """One super-block pass against a page pool (continuous-batching serve).
+
+    ``mode`` is "prefill" or "decode"; ``attn_kw`` forwards to the paged
+    attention entry point. Residual/MLP structure mirrors
+    :func:`_apply_superblock` exactly — only the KV storage differs."""
+    new_pool = {}
+    sp = "seq_sp" if cfg.seq_shard else None
+    for i, kind in enumerate(pattern):
+        if kind != "attn":
+            raise NotImplementedError(
+                f"paged serving supports self-attention blocks only, got "
+                f"{kind!r} in pattern {pattern} (recurrent/cross blocks "
+                f"keep per-slot dense state; see repro.serve)")
+        fn = (A.apply_attn_paged_prefill if mode == "prefill"
+              else A.apply_attn_paged_decode)
+        y, npl = fn(bp[f"b{i}"], x, cfg, pool=pool[f"c{i}"], **attn_kw)
+        x = shard(x + y, "batch", sp, None)
+        if f"m{i}" in bp:
+            if cfg.family == "moe" and kind == "attn":
+                x = x + B.apply_moe(bp[f"m{i}"], x, cfg)
+            else:
+                x = x + B.apply_mlp(bp[f"m{i}"], x, cfg)
+            x = shard(x, "batch", sp, None)
+        new_pool[f"c{i}"] = npl
+    return x, new_pool
+
+
 class Model:
     """Functional model: init / loss / prefill / decode_step."""
 
@@ -290,6 +319,77 @@ class Model:
                 {f"c{i}": one(kind)
                  for i, kind in enumerate(cfg.block_tail)}, axis=0)
         return caches
+
+    # ---- paged serve (continuous batching, repro.serve) --------------------
+    def supports_paged(self) -> str | None:
+        """None when the paged serve path covers this config, else why not."""
+        cfg = self.cfg
+        if any(k != "attn" for k in self.pattern):
+            return f"block pattern {self.pattern} has non-attn blocks"
+        if cfg.block_tail:
+            return f"block_tail {cfg.block_tail} is not paged"
+        if cfg.local_window:
+            return "local-window (rolling) caches are not paged"
+        if cfg.n_context_tokens or cfg.is_encdec:
+            return "cross-attention context caches are not paged"
+        return None
+
+    def init_page_pool(self, n_pages: int, page_size: int):
+        """Layer-stacked paged KV pool: leaves (n_repeats, n_pages,
+        page_size, KV, D) (+ scale leaves under KV8). No batch axis — slots
+        exist only in the page table the serve engine packs per step."""
+        reason = self.supports_paged()
+        if reason is not None:
+            raise NotImplementedError(f"paged KV pool: {reason}")
+        cfg = self.cfg
+        one = A.init_attn_page_pool(cfg, n_pages, page_size)
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_repeats,) + a.shape, a.dtype), one)
+        return {"body": {f"c{i}": stacked
+                         for i in range(len(self.pattern))}}
+
+    def prefill_paged(self, params: Params, tokens, pool, *,
+                      prefix_page_ids, write_page_ids, write_offs,
+                      write_from: int = 0):
+        """Suffix prefill for one request through the page pool.
+
+        ``tokens`` (1, Ls) is the prompt suffix after the shared range
+        (``len(prefix_page_ids) * page_size`` positions, gathered from the
+        pool). Returns (last-position logits, new pool). Static shapes:
+        retraces per (Ls, n_prefix_pages, write_from) combination."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp, pl = xs
+            y, npl = _apply_superblock_paged(
+                bp, carry, cfg, self.pattern, pool=pl, mode="prefill",
+                prefix_page_ids=prefix_page_ids,
+                write_page_ids=write_page_ids, write_offs=write_offs,
+                write_from=write_from)
+            return y, npl
+        x = self._embed_tokens(params, tokens)
+        x, new_body = _scan(body, x, (params["blocks"], pool["body"]))
+        logits = self._logits(params, x[:, -1:])
+        return logits, {"body": new_body}
+
+    def decode_step_paged(self, params: Params, pool, tokens, page_indices,
+                          steps):
+        """One packed decode step over every slot. tokens (B, 1) int32;
+        page_indices (B, P) int32; steps (B,) int32 per-slot positions.
+        Returns (logits (B, 1, V), new pool). One fixed shape — zero
+        retraces as requests come and go."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp, pl = xs
+            y, npl = _apply_superblock_paged(
+                bp, carry, cfg, self.pattern, pool=pl, mode="decode",
+                page_indices=page_indices, steps=steps)
+            return y, npl
+        x = self._embed_tokens(params, tokens)
+        x, new_body = _scan(body, x, (params["blocks"], pool["body"]))
+        logits = self._logits(params, x)
+        return logits, {"body": new_body}
 
     def prefill(self, params: Params, batch: dict, max_len: int):
         """Process the prompt, fill caches; returns (last-pos logits, caches)."""

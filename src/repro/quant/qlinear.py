@@ -156,6 +156,14 @@ def _ptq_apply(params, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     backend = get_backend(cfg.backend_name())
     qw, sg = params["qw"], params["sg"]
     d_out, d_in = qw.shape
+    if d_in % sg.shape[-1]:
+        # a floor-divided group size would reshape into the wrong groups
+        # and silently mis-scale every output channel
+        raise ValueError(
+            f"grouped PTQ layer mis-shaped: weight ({d_out}, {d_in}) "
+            f"carries {sg.shape[-1]} scale groups, but d_in={d_in} is not "
+            f"divisible by the group count — requantize with a group size "
+            f"that divides d_in")
     g = d_in // sg.shape[-1]
     qx, sx = Q.quantize_per_token(x, cfg.a_bits)
     if sg.shape[-1] == 1:

@@ -1,0 +1,16 @@
+"""Continuous-batching serving: paged KV pool + prefix trie + scheduler.
+
+See docs/SERVING.md for the page-table layout, scheduler semantics and
+eviction rules. Public surface:
+
+  * :class:`~repro.serve.engine.ServeEngine` / ``Request`` — the
+    submit/step scheduler over a packed, zero-retrace decode.
+  * :class:`~repro.serve.paging.PageAllocator` /
+    :class:`~repro.serve.paging.PrefixTrie` — the host-side page
+    bookkeeping (refcounted free list; prompt-prefix page sharing).
+"""
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paging import NULL_PAGE, PageAllocator, PrefixTrie
+
+__all__ = ["ServeEngine", "Request", "PageAllocator", "PrefixTrie",
+           "NULL_PAGE"]

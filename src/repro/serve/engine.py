@@ -1,0 +1,372 @@
+"""Continuous-batching serve engine over the paged KV pool.
+
+:class:`ServeEngine` is the host scheduler the ROADMAP's serving story
+needs around the quantized GEMM core: requests ``submit()`` at any time,
+``step()`` admits arrivals into free batch slots, runs **one packed decode
+step** over every active slot, and retires finished requests — freeing
+their pages and re-opening their slots — without ever retracing. The
+device only ever sees two programs:
+
+  * a per-request **suffix prefill** (``Model.prefill_paged``, batch 1),
+    jit-keyed on ``(suffix_len, n_prefix_pages, write_from)``;
+  * one fixed-shape **packed decode** (``Model.decode_step_paged``) over
+    ``(n_slots, 1)`` tokens + the ``(n_slots, pages_per_slot)`` int32
+    page table + per-slot ``steps`` — the same static-gather trick
+    ``DevicePlan`` uses for forest schedules. Inactive slots point every
+    table entry at the null page and carry step 0; their lanes compute
+    garbage that is never read.
+
+Prompt prefixes are shared through the :class:`~repro.serve.paging.
+PrefixTrie` at full-page granularity: a request whose prompt extends an
+indexed prefix takes refcounts on those pages instead of re-prefilling
+them. With an exact (fp/bf16) pool the shared range is *skipped at
+compute time* (prefill sees only the suffix and gathers the shared K/V);
+with an int8 pool (``kv_cache_bits=8``) the shared range is recomputed —
+the dense reference attends over full-precision K/V during prefill, so
+skipping compute would break bit-identity — but the shared pages are
+still shared (per-token quantization is deterministic, the bytes match)
+and only the non-shared tail is written.
+
+Correctness bar, and the invariant the tests pin: every request's token
+stream is **bit-identical** to running it alone through
+``greedy_generate`` with the same ``max_len`` — the gathered cache view
+has the same sequence extent, masked lanes contribute exact zeros, and
+per-row math is batch-independent.
+
+The engine owns one page pool per (model, params): weight updates need a
+fresh engine (the trie indexes K/V bytes, which are a function of both).
+All scheduling state is host-side and single-threaded.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import deque
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import jax_compat
+from repro.models.model import Model
+from repro.serve.paging import PageAllocator, PrefixTrie
+from repro.train.serve_step import _place_batch
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus the engine's bookkeeping for it."""
+    rid: int
+    prompt: tuple
+    max_new_tokens: int
+    eos_id: int | None = None
+    # -- engine state ------------------------------------------------------
+    out: list = dataclasses.field(default_factory=list)
+    page_ids: list = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    length: int = 0            # K/V rows written: prompt, then +1 per step
+    shared_pages: int = 0      # prompt pages taken from the prefix trie
+    prefill_computed: int = 0  # prompt positions the prefill forward ran
+    # -- timeline (perf_counter seconds / engine decode-step counts) ------
+    t_submit: float = 0.0
+    t_admit: float | None = None
+    t_done: float | None = None
+    submit_step: int = 0
+    admit_step: int | None = None
+    done_step: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def tokens(self) -> list:
+        """Generated token ids (token 0 is the prefill argmax)."""
+        return list(self.out)
+
+
+class ServeEngine:
+    """Paged-KV continuous-batching scheduler around one (model, params).
+
+    ``n_slots`` fixes the packed decode batch; ``max_len`` bounds any
+    request's total (prompt + generated - 1) positions and must be a
+    multiple of ``page_size``. ``n_pages`` defaults to
+    ``n_slots * max_len / page_size + 1`` (page 0 is the null page), which
+    guarantees admission and decode never run out of pages — trie-held
+    pages beyond that working set are evicted LRU on demand. ``mesh=``
+    runs both device programs under an ambient mesh with the packed slot
+    arrays placed under the ``batch`` sharding rule (the same serve-cell
+    topology as ``greedy_generate(mesh=)``). ``donate=False`` keeps the
+    pool un-donated for callers that hold references across steps.
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 4,
+                 max_len: int = 256, page_size: int = 16,
+                 n_pages: int | None = None, mesh=None,
+                 donate: bool = True):
+        reason = model.supports_paged()
+        if reason is not None:
+            raise NotImplementedError(f"paged serving: {reason}")
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len ({max_len}) must be a multiple of page_size "
+                f"({page_size}) so a slot's page table covers it exactly")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = max_len // page_size
+        self.n_pages = (n_slots * self.pages_per_slot + 1
+                        if n_pages is None else n_pages)
+        self.mesh = mesh
+        # int8 pools share pages but must not skip prefill compute: the
+        # dense reference attends over full-precision K/V while prefilling,
+        # and a dequantized prefix would break bit-identity
+        self.exact_pool = model.cfg.kv_cache_bits != 8
+        self.pool = model.init_page_pool(self.n_pages, page_size)
+        self.alloc = PageAllocator(self.n_pages)
+        self.trie = PrefixTrie(page_size)
+        self.slots: list[int | None] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.step_count = 0
+        self._next_rid = 0
+        self._prefill = jax.jit(model.prefill_paged,
+                                static_argnames=("write_from",),
+                                donate_argnums=(2,) if donate else ())
+        self._decode = jax.jit(model.decode_step_paged,
+                               donate_argnums=(1,) if donate else ())
+        self.counters = {"admitted": 0, "completed": 0, "decode_steps": 0,
+                         "decode_tokens": 0, "prefix_hits": 0,
+                         "pages_shared": 0, "prefill_computed": 0,
+                         "prefill_skipped": 0, "prefill_written": 0}
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: int | None = None) -> int:
+        """Queue a request; returns its id. Admission happens in step()."""
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        # token 0 comes from prefill; decode i writes K/V position
+        # len(prompt) + i - 1, so the last write lands at
+        # L + max_new_tokens - 2 and must stay under max_len
+        if len(prompt) + max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) - 1 exceeds max_len ({self.max_len})")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                      t_submit=time.perf_counter(),
+                      submit_step=self.step_count)
+        self.queue.append(req)
+        return rid
+
+    # -- scheduling --------------------------------------------------------
+    def _mesh_ctx(self):
+        return (jax_compat.set_mesh(self.mesh) if self.mesh is not None
+                else contextlib.nullcontext())
+
+    def _alloc_page(self) -> int | None:
+        """One page, evicting trie-only pages (LRU) under pressure."""
+        pid = self.alloc.alloc()
+        if pid is None and self.trie.evict(self.alloc, 1):
+            pid = self.alloc.alloc()
+        return pid
+
+    def _admit_one(self, req: Request, slot: int) -> bool:
+        """Prefill ``req`` into pages and seat it; False = no pages yet."""
+        L, ps = len(req.prompt), self.page_size
+        n_prompt_pages = -(-L // ps)
+        # cap the match so the suffix keeps >= 1 token: the last prompt
+        # position must run through prefill to produce the step-0 logits,
+        # and decode must never append to a page another request holds
+        shared = self.trie.match(req.prompt, max_pages=(L - 1) // ps)
+        for pid in shared:            # pin before eviction can see them
+            self.alloc.incref(pid)
+        need = n_prompt_pages - len(shared)
+        if self.alloc.free_count < need:
+            self.trie.evict(self.alloc, need - self.alloc.free_count)
+        if self.alloc.free_count < need:
+            for pid in shared:
+                self.alloc.decref(pid)
+            return False
+        page_ids = list(shared) + [self.alloc.alloc() for _ in range(need)]
+        shared_len = len(shared) * ps
+        if self.exact_pool:
+            start, write_from = shared_len, 0   # skip shared compute
+        else:
+            start, write_from = 0, shared_len   # recompute, share bytes
+        suffix = np.asarray([req.prompt[start:]], np.int32)
+        prefix = np.asarray(page_ids[:start // ps], np.int32)
+        wp = np.asarray([page_ids[p // ps] for p in range(shared_len, L)],
+                        np.int32)
+        wo = np.asarray([p % ps for p in range(shared_len, L)], np.int32)
+        with self._mesh_ctx():
+            logits, self.pool = self._prefill(
+                self.params, jnp.asarray(suffix), self.pool,
+                prefix_page_ids=jnp.asarray(prefix),
+                write_page_ids=jnp.asarray(wp), write_offs=jnp.asarray(wo),
+                write_from=write_from)
+            tok = int(np.asarray(
+                jnp.argmax(logits[:, -1], -1).astype(jnp.int32))[0])
+        req.out.append(tok)
+        req.length = L
+        req.page_ids = page_ids
+        req.shared_pages = len(shared)
+        req.prefill_computed = L - start
+        req.t_admit = time.perf_counter()
+        req.admit_step = self.step_count
+        self.counters["admitted"] += 1
+        self.counters["prefix_hits"] += bool(shared)
+        self.counters["pages_shared"] += len(shared)
+        self.counters["prefill_computed"] += L - start
+        self.counters["prefill_skipped"] += shared_len
+        self.counters["prefill_written"] += L - shared_len
+        # index the freshly filled prompt pages immediately, so a request
+        # arriving next step (or later this step) can already share them
+        self.trie.insert(req.prompt, page_ids, self.alloc)
+        if len(req.out) >= req.max_new_tokens or tok == req.eos_id:
+            self._finish(req)
+        else:
+            req.slot = slot
+            self.slots[slot] = req.rid
+            self.active[req.rid] = req
+        return True
+
+    def _admit(self) -> None:
+        while self.queue and None in self.slots:
+            if not self._admit_one(self.queue[0],
+                                   self.slots.index(None)):
+                break                 # page pressure: retry next step
+            self.queue.popleft()
+
+    def _finish(self, req: Request) -> None:
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            del self.active[req.rid]
+            req.slot = None
+        for pid in req.page_ids:
+            self.alloc.decref(pid)    # trie-held pages survive (refcount)
+        req.t_done = time.perf_counter()
+        req.done_step = self.step_count
+        self.counters["completed"] += 1
+        self.finished.append(req)
+
+    def step(self) -> list[Request]:
+        """Admit arrivals, run one packed decode step, retire finished.
+
+        Returns the requests that finished during this call (their
+        ``tokens`` are final). A request admitted this step decodes this
+        step: its prefill token feeds the packed decode exactly like
+        ``greedy_generate``'s first loop iteration.
+        """
+        n_done = len(self.finished)
+        self._admit()
+        packed = [(s, self.active[rid])
+                  for s, rid in enumerate(self.slots) if rid is not None]
+        if packed:
+            self.step_count += 1
+            self.counters["decode_steps"] += 1
+            tokens = np.zeros((self.n_slots, 1), np.int32)
+            steps = np.zeros((self.n_slots,), np.int32)
+            table = np.zeros((self.n_slots, self.pages_per_slot), np.int32)
+            for s, req in packed:
+                # this step writes K/V position req.length — grow the
+                # request's table when it crosses a page boundary
+                if req.length // self.page_size >= len(req.page_ids):
+                    pid = self._alloc_page()
+                    if pid is None:
+                        raise RuntimeError(
+                            f"page pool exhausted ({self.alloc!r}) — "
+                            f"size n_pages for the slot working set")
+                    req.page_ids.append(pid)
+                tokens[s, 0] = req.out[-1]
+                steps[s] = req.length
+                table[s, :len(req.page_ids)] = req.page_ids
+            batch = {"tokens": tokens, "table": table, "steps": steps}
+            with self._mesh_ctx():
+                if self.mesh is not None:
+                    batch = _place_batch(batch, self.mesh)
+                logits, self.pool = self._decode(
+                    self.params, self.pool, jnp.asarray(batch["tokens"]),
+                    jnp.asarray(batch["table"]),
+                    jnp.asarray(batch["steps"]))
+                toks = np.asarray(
+                    jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+            done = []
+            for s, req in packed:
+                tok = int(toks[s])
+                req.out.append(tok)
+                req.length += 1
+                self.counters["decode_tokens"] += 1
+                if (len(req.out) >= req.max_new_tokens
+                        or tok == req.eos_id):
+                    done.append(req)
+            for req in done:
+                self._finish(req)
+        return self.finished[n_done:]
+
+    def run(self, max_steps: int = 100_000) -> list[Request]:
+        """Drive step() until every submitted request finished."""
+        n_done = len(self.finished)
+        steps = 0
+        while self.queue or self.active:
+            if steps >= max_steps:
+                raise RuntimeError(f"run() exceeded {max_steps} steps")
+            steps += 1
+            before = (len(self.queue), len(self.active),
+                      len(self.finished))
+            self.step()
+            if not self.active and before == (len(self.queue),
+                                              len(self.active),
+                                              len(self.finished)):
+                raise RuntimeError(
+                    f"scheduler stalled: {len(self.queue)} queued "
+                    f"request(s) cannot be admitted "
+                    f"(pages: {self.alloc!r}, trie: {self.trie!r})")
+        return self.finished[n_done:]
+
+    # -- introspection -----------------------------------------------------
+    def stats(self) -> dict:
+        return {**self.counters, "queued": len(self.queue),
+                "active": len(self.active),
+                "finished": len(self.finished),
+                "pages": self.alloc.stats(), "trie": self.trie.stats()}
+
+    def report(self) -> dict:
+        """Latency/throughput summary over the finished requests."""
+        reqs = self.finished
+        per = [{"rid": r.rid, "prompt_len": len(r.prompt),
+                "n_tokens": len(r.out),
+                "shared_pages": r.shared_pages,
+                "prefill_computed": r.prefill_computed,
+                "ttft_s": (r.t_admit or r.t_submit) - r.t_submit,
+                "latency_s": (r.t_done - r.t_submit) if r.done else None}
+               for r in reqs]
+        total_tokens = sum(len(r.out) for r in reqs)
+        t0 = min((r.t_submit for r in reqs), default=0.0)
+        t1 = max((r.t_done for r in reqs if r.done), default=t0)
+        wall = max(t1 - t0, 1e-9)
+        return {"requests": per, "n_requests": len(reqs),
+                "total_tokens": total_tokens, "wall_s": wall,
+                "tokens_per_s": total_tokens / wall,
+                "counters": self.stats()}
+
+    def __repr__(self) -> str:
+        return (f"ServeEngine(slots={sum(r is not None for r in self.slots)}"
+                f"/{self.n_slots} queued={len(self.queue)} "
+                f"finished={len(self.finished)} steps={self.step_count})")

@@ -54,23 +54,30 @@ _STEP_JITS: "weakref.WeakKeyDictionary[Model, dict]" = \
     weakref.WeakKeyDictionary()
 
 
-def _jit_prefill(model: Model, max_len: int):
-    """One jitted prefill per (model, max_len)."""
+def _jit_prefill(model: Model, max_len: int, mesh=None):
+    """One jitted prefill per (model, max_len, mesh).
+
+    The ambient mesh is part of the key: tracing under ``set_mesh`` bakes
+    the mesh into the step's sharding constraints, but the jit's own cache
+    only keys on input avals/shardings — interleaved ``greedy_generate``
+    calls with different ``mesh=`` values (or mesh then no-mesh) would
+    otherwise silently reuse a step traced under the wrong mesh."""
     per = _STEP_JITS.setdefault(model, {})
-    key = ("prefill", max_len)
+    key = ("prefill", max_len, mesh)
     if key not in per:
         per[key] = jax.jit(make_prefill(model, max_len))
     return per[key]
 
 
-def _jit_decode_step(model: Model, donate: bool):
-    """One jitted decode step per (model, donate).
+def _jit_decode_step(model: Model, donate: bool, mesh=None):
+    """One jitted decode step per (model, donate, mesh).
 
     Donating the caches lets XLA update them in place; the host loop only
     ever feeds the previous step's output back in, so the donated input
-    buffer is dead by construction."""
+    buffer is dead by construction. ``mesh`` keys the memo for the same
+    reason as :func:`_jit_prefill`."""
     per = _STEP_JITS.setdefault(model, {})
-    key = ("decode", donate)
+    key = ("decode", donate, mesh)
     if key not in per:
         per[key] = jax.jit(make_decode_step(model),
                            donate_argnums=(1,) if donate else ())
@@ -118,8 +125,8 @@ def greedy_generate(model: Model, params, batch, max_len: int,
     with ctx:
         if mesh is not None:
             batch = _place_batch(batch, mesh)
-        logits, caches = _jit_prefill(model, max_len)(params, batch)
-        step_fn = _jit_decode_step(model, donate)
+        logits, caches = _jit_prefill(model, max_len, mesh)(params, batch)
+        step_fn = _jit_decode_step(model, donate, mesh)
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         toks = [tok]
         for i in range(n_steps - 1):

@@ -412,3 +412,185 @@ def test_precompile_reserves_capacity(cache):
     assert stats == {"layers": 1, "plans": 5, "built": 5}
     assert small.capacity >= 5 and len(small) == 5
     assert small.stats()["evictions"] == 0
+
+
+# -- thread-safety under concurrent serving (the lock-scope fix) -------------
+
+class _Barrier:
+    """threading.Barrier with a pytest-friendly timeout."""
+
+    def __init__(self, n):
+        import threading
+        self.b = threading.Barrier(n, timeout=30)
+
+    def wait(self):
+        self.b.wait()
+
+
+def _run_threads(fns):
+    """Run callables concurrently; re-raise the first worker exception."""
+    import threading
+    errs = []
+
+    def wrap(fn):
+        def run():
+            try:
+                fn()
+            except BaseException as e:   # noqa: BLE001 — reported below
+                errs.append(e)
+        return run
+
+    ts = [threading.Thread(target=wrap(fn)) for fn in fns]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in ts), "worker thread hung"
+    if errs:
+        raise errs[0]
+    return errs
+
+
+def test_threaded_same_weight_single_build(rng, monkeypatch):
+    """N threads racing the same cold weight coalesce on ONE build: the
+    plan body runs once, misses == 1, every other lookup counts a hit,
+    and all threads get the same entry. (Before the lock-scope fix the
+    build ran under the cache lock, so this was serialized-but-single;
+    the fix must keep it single WITHOUT the lock.)"""
+    import time as _time
+    import repro.core.plancache as PC
+    builds = []
+    real_plan = PC.BatchedTransitiveEngine.plan
+
+    def slow_plan(self, qw, groups=1):
+        builds.append(1)
+        _time.sleep(0.05)          # widen the race window
+        return real_plan(self, qw, groups=groups)
+    monkeypatch.setattr(PC.BatchedTransitiveEngine, "plan", slow_plan)
+
+    c = PlanCache()
+    w = _w(rng)
+    n = 8
+    bar = _Barrier(n)
+    results = [None] * n
+
+    def worker(i):
+        def run():
+            bar.wait()
+            results[i] = c.get_or_build(w, 4, 8)
+        return run
+    _run_threads([worker(i) for i in range(n)])
+    assert len(builds) == 1
+    assert all(r is results[0] and r is not None for r in results)
+    s = c.stats()
+    assert s["misses"] == 1 and s["hits"] == n - 1
+    assert len(c) == 1
+
+
+def test_threaded_distinct_weights_no_lost_entries(rng):
+    """Concurrent builds of DISTINCT weights must not lose entries or
+    double-count: misses == distinct weights, hits + misses == lookups."""
+    n_weights, per = 6, 4
+    ws = [_w(rng) for _ in range(n_weights)]
+    c = PlanCache()
+    bar = _Barrier(n_weights * per)
+
+    def worker(w):
+        def run():
+            bar.wait()
+            for _ in range(3):
+                c.get_or_build(w, 4, 8)
+        return run
+    _run_threads([worker(w) for w in ws for _ in range(per)])
+    s = c.stats()
+    lookups = n_weights * per * 3
+    assert s["misses"] == n_weights
+    assert s["hits"] == lookups - n_weights
+    assert len(c) == n_weights
+    # every entry actually landed and runs bit-exact
+    x = rng.integers(-128, 128, (32, 3))
+    for w in ws:
+        np.testing.assert_array_equal(
+            c.run(w, x, 4, 8), w.astype(np.int64) @ x.astype(np.int64))
+
+
+def test_cold_build_does_not_block_other_keys(rng, monkeypatch):
+    """The lock-scope property itself: while one thread is inside a slow
+    cold build, a lookup of a DIFFERENT key completes — the build runs
+    outside the cache lock."""
+    import threading
+    import repro.core.plancache as PC
+    w_slow, w_fast = _w(rng), _w(rng)
+    slow_fp = weight_fingerprint(w_slow.astype(np.int8))
+    gate = threading.Event()
+    entered = threading.Event()
+    real_plan = PC.BatchedTransitiveEngine.plan
+
+    def gated_plan(self, qw, groups=1):
+        if weight_fingerprint(qw.astype(np.int8)) == slow_fp:
+            entered.set()
+            assert gate.wait(timeout=30), "test gate never opened"
+        return real_plan(self, qw, groups=groups)
+    monkeypatch.setattr(PC.BatchedTransitiveEngine, "plan", gated_plan)
+
+    c = PlanCache()
+    t = threading.Thread(target=lambda: c.get_or_build(w_slow, 4, 8))
+    t.start()
+    try:
+        assert entered.wait(timeout=30)
+        # the slow build holds the pending slot, NOT the lock: this
+        # returns immediately rather than deadlocking the test
+        c.get_or_build(w_fast, 4, 8)
+        assert c.stats()["misses"] == 2 and len(c) == 1
+    finally:
+        gate.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    assert len(c) == 2 and c.stats()["hits"] == 0
+
+
+def test_builder_failure_releases_waiters(rng, monkeypatch):
+    """A failed build must not wedge concurrent waiters of the same key:
+    they retry, one becomes the new builder, and the entry lands."""
+    import threading
+    import repro.core.plancache as PC
+    fail_once = {"armed": True}
+    first_inside = threading.Event()
+    waiter_waiting = threading.Event()
+    real_plan = PC.BatchedTransitiveEngine.plan
+
+    def flaky_plan(self, qw, groups=1):
+        if fail_once["armed"]:
+            fail_once["armed"] = False
+            first_inside.set()
+            # don't fail until the second thread is parked on the event
+            assert waiter_waiting.wait(timeout=30)
+            raise RuntimeError("simulated plan-build failure")
+        return real_plan(self, qw, groups=groups)
+    monkeypatch.setattr(PC.BatchedTransitiveEngine, "plan", flaky_plan)
+
+    c = PlanCache()
+    w = _w(rng)
+    outcome = {}
+
+    def first():
+        try:
+            c.get_or_build(w, 4, 8)
+        except RuntimeError as e:
+            outcome["first"] = e
+
+    def second():
+        assert first_inside.wait(timeout=30)
+        waiter_waiting.set()
+        outcome["second"] = c.get_or_build(w, 4, 8)
+
+    _run_threads([first, second])
+    # the builder's caller saw the exception; the waiter recovered
+    assert isinstance(outcome.get("first"), RuntimeError)
+    assert outcome.get("second") is not None
+    assert len(c) == 1
+    # both lookups counted as misses (each ran a build attempt)
+    assert c.stats()["misses"] == 2 and c.stats()["hits"] == 0
+    # and the key is fully healthy afterwards
+    assert c.get_or_build(w, 4, 8) is outcome["second"]
+    assert c.stats()["hits"] == 1

@@ -64,3 +64,19 @@ def test_qat_ste_grads():
     g = jax.grad(lambda pp: (linear_apply(pp, x, cfg) ** 2).mean())(p)
     gw = np.asarray(g["w"])
     assert np.isfinite(gw).all() and np.abs(gw).sum() > 0
+
+
+def test_grouped_ptq_shape_mismatch_is_loud():
+    """A PTQ layer whose d_in is not divisible by its scale-group count
+    must raise, not floor-divide into wrong groups and silently mis-scale
+    every output channel (e.g. a weight sliced after quantization)."""
+    cfg = QuantConfig(mode="ptq", w_bits=4, a_bits=8, group=64)
+    p = linear_init(jax.random.PRNGKey(0), 192, 16, cfg)   # sg: (16, 3)
+    bad = {"qw": p["qw"][:, :100], "sg": p["sg"]}          # 100 % 3 != 0
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 100), jnp.float32)
+    with pytest.raises(ValueError, match=r"\(16, 100\).*3 scale groups"):
+        linear_apply(bad, x, cfg)
+    # divisible slices still pass the guard (3 groups of 32)
+    ok = {"qw": p["qw"][:, :96], "sg": p["sg"]}
+    y = linear_apply(ok, x[:, :96], cfg)
+    assert np.isfinite(np.asarray(y)).all()

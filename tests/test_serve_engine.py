@@ -1,0 +1,362 @@
+"""Continuous-batching serve engine (ISSUE 6): paged KV pool, prefix trie,
+request scheduler.
+
+The acceptance property pinned here: every request's token stream out of
+``ServeEngine`` — packed decode slots, staggered arrivals, pages shared
+through the prefix trie — is **bit-identical** to running that request
+alone through ``greedy_generate`` with the same ``max_len``, for every
+device-resident backend in the registry. Around it: unit tests for the
+page allocator and the prefix trie (LRU leaf-only eviction, refcount
+pinning), the exact-pool compute-skip counters (shared prefixes re-prefill
+zero shared pages), KV8 parity (shared bytes, recomputed activations),
+scheduler admission/eviction/stall behaviour, and the
+``serve_engine_bench`` JSON contract (``serve_engine.tokens_per_s``).
+"""
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.backend import get_backend, list_backends
+from repro.launch.specs import serve_config
+from repro.models.model import Model
+from repro.serve import NULL_PAGE, PageAllocator, PrefixTrie, ServeEngine
+from repro.train.serve_step import greedy_generate
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEVICE_BACKENDS = [n for n in list_backends()
+                   if get_backend(n).device_resident
+                   and get_backend(n).cpu_ok]
+
+
+@pytest.fixture
+def cache():
+    """Fresh process-default plan cache per test; restores the previous."""
+    from repro.core.plancache import PlanCache, set_default_cache
+    c = PlanCache(capacity=64)
+    prev = set_default_cache(c)
+    yield c
+    set_default_cache(prev)
+
+
+@pytest.fixture(scope="module")
+def fp_cell():
+    """Exact-pool (KV16) cell: the compute-skip prefix path."""
+    cfg = get_reduced("smollm_135m").replace(n_layers=2)
+    model = Model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, plen=8, n=4, seed=7):
+    """n prompts; evens replay prompt 0, odds share its first half."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab, size=plen).tolist()
+    return [list(base) if i % 2 == 0 else
+            base[:plen // 2]
+            + rng.integers(0, cfg.vocab, size=plen - plen // 2).tolist()
+            for i in range(n)]
+
+
+def _reference(model, params, prompt, max_len, n_new):
+    """The request alone through today's one-shot path, same max_len."""
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    return np.asarray(greedy_generate(model, params, batch,
+                                      max_len=max_len, n_steps=n_new))[0]
+
+
+# -- page allocator ----------------------------------------------------------
+
+def test_allocator_basics():
+    a = PageAllocator(5)                  # pages 1..4; 0 is the null page
+    got = [a.alloc() for _ in range(4)]
+    assert sorted(got) == [1, 2, 3, 4] and NULL_PAGE not in got
+    assert a.alloc() is None              # exhausted, no exception
+    assert a.free_count == 0 and a.used == 4
+    assert a.decref(got[0]) is True       # refcount 1 -> freed
+    assert a.free_count == 1
+    pid = a.alloc()
+    assert pid == got[0]                  # freed page comes back
+    s = a.stats()
+    assert s["allocated"] == 5 and s["freed"] == 1 and s["peak_used"] == 4
+
+
+def test_allocator_refcounts():
+    a = PageAllocator(4)
+    pid = a.alloc()
+    a.incref(pid)                         # a second holder (the trie, say)
+    assert a.refcount(pid) == 2
+    assert a.decref(pid) is False         # still held
+    assert a.decref(pid) is True          # last ref -> freed
+    assert a.free_count == 3
+    with pytest.raises(ValueError):
+        a.decref(pid)                     # double-free is loud
+
+
+# -- prefix trie -------------------------------------------------------------
+
+def test_trie_match_insert():
+    a = PageAllocator(16)
+    t = PrefixTrie(page_size=4)
+    prompt = list(range(40, 49))          # 9 tokens: 2 full pages + 1 tail
+    pages = [a.alloc() for _ in range(3)]
+    added = t.insert(prompt, pages, a)
+    assert added == 2 and len(t) == 2     # only fully-covered pages indexed
+    assert a.refcount(pages[0]) == 2      # trie pins what it indexes
+    assert a.refcount(pages[2]) == 1      # the tail page is not indexed
+    # full-prefix hit, capped so the suffix keeps >= 1 token
+    assert t.match(prompt, max_pages=2) == pages[:2]
+    assert t.match(prompt, max_pages=1) == pages[:1]
+    # divergence inside page 2: only page 1 shared
+    other = prompt[:4] + [99] * 5
+    assert t.match(other, max_pages=2) == pages[:1]
+    assert t.match([99] * 8, max_pages=2) == []
+    s = t.stats()
+    assert s["pages_inserted"] == 2 and s["pages_matched"] == 4
+
+
+def test_trie_evict_leaf_lru_only():
+    a = PageAllocator(16)
+    t = PrefixTrie(page_size=2)
+    p1 = [1, 2, 3, 4]
+    p2 = [1, 2, 7, 8]
+    t.insert(p1, [a.alloc(), a.alloc()], a)
+    t.insert(p2, [t.match(p2, max_pages=1)[0], a.alloc()], a)
+    # drop the request refs: pages now live only in the trie
+    for pid in range(1, 4):
+        a.decref(pid)
+    t.match(p1, max_pages=2)              # touch p1's leaf -> p2's is LRU
+    assert t.evict(a, 1) == 1
+    assert t.match(p2, max_pages=2) == [1]    # p2's leaf gone, root kept
+    assert t.match(p1, max_pages=2) == [1, 2]  # p1 intact (leaf-only LRU)
+    # the shared root page is only evictable once its children are gone
+    assert t.evict(a, 2) == 2
+    assert len(t) == 0 and a.free_count == a.n_pages - 1
+
+
+def test_trie_never_evicts_held_pages():
+    a = PageAllocator(8)
+    t = PrefixTrie(page_size=2)
+    t.insert([5, 6], [a.alloc()], a)      # refcount 2: request + trie
+    assert t.evict(a, 1) == 0             # pinned -> not evictable
+    a.decref(1)
+    assert t.evict(a, 1) == 1
+
+
+# -- engine construction / submission validation -----------------------------
+
+def test_engine_validation(fp_cell):
+    model, params = fp_cell
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        ServeEngine(model, params, max_len=10, page_size=4)
+    with pytest.raises(ValueError, match="n_slots"):
+        ServeEngine(model, params, n_slots=0, max_len=8, page_size=4)
+    eng = ServeEngine(model, params, n_slots=2, max_len=8, page_size=4)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit([], 2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], 0)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit([1, 2, 3, 4], 6)       # 4 + 6 - 1 > 8
+
+
+# -- exact pool: shared prefixes skip prefill compute ------------------------
+
+def test_prefix_reuse_skips_shared_compute(fp_cell):
+    """KV16: the second request over the same prompt re-prefills ZERO
+    shared pages — compute starts at the shared boundary and only the
+    non-shared tail is written."""
+    model, params = fp_cell
+    cfg = model.cfg
+    assert cfg.kv_cache_bits != 8
+    eng = ServeEngine(model, params, n_slots=2, max_len=16, page_size=4)
+    plen, gen = 9, 3                      # 2 full pages + 1 tail page
+    prompts = _prompts(cfg, plen=plen, n=3)
+    for p in prompts:
+        eng.submit(p, gen)
+    done = eng.run()
+    assert len(done) == 3
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].shared_pages == 0
+    assert by_rid[0].prefill_computed == plen
+    # rid 2 replays prompt 0 entirely: both full pages shared, compute
+    # covers only the tail (9 - 8 = 1 position)
+    assert by_rid[2].shared_pages == 2
+    assert by_rid[2].prefill_computed == plen - 8
+    # rid 1 shares the first half (page 0 only)
+    assert by_rid[1].shared_pages == 1
+    assert by_rid[1].prefill_computed == plen - 4
+    c = eng.counters
+    assert c["prefix_hits"] == 2 and c["pages_shared"] == 3
+    assert c["prefill_skipped"] == 12     # 2*4 + 1*4 positions never ran
+    # written rows never overlap a shared page
+    assert c["prefill_written"] == 3 * plen - c["prefill_skipped"]
+    # identical prompts -> identical greedy continuations
+    assert by_rid[0].tokens == by_rid[2].tokens
+    # and the engine's tokens match the one-shot path
+    for r in done:
+        ref = _reference(model, params, list(r.prompt), 16, gen)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+
+
+def test_staggered_equals_batch_submit(fp_cell):
+    """Scheduling is invisible in the tokens: staggered arrivals through
+    busy slots produce the same streams as submit-all-then-run."""
+    model, params = fp_cell
+    prompts = _prompts(model.cfg, plen=6, n=4, seed=11)
+    eng_a = ServeEngine(model, params, n_slots=2, max_len=12, page_size=4)
+    for p in prompts:
+        eng_a.submit(p, 4)
+    toks_a = {r.rid: r.tokens for r in eng_a.run()}
+
+    eng_b = ServeEngine(model, params, n_slots=2, max_len=12, page_size=4)
+    submitted = 0
+    while submitted < len(prompts) or eng_b.queue or eng_b.active:
+        if submitted < len(prompts):
+            eng_b.submit(prompts[submitted], 4)
+            submitted += 1
+        eng_b.step()
+    toks_b = {r.rid: r.tokens for r in eng_b.finished}
+    assert toks_a == toks_b
+
+
+# -- bit-identity across backends (the acceptance property) ------------------
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_tokens_bit_identical_per_backend(backend, cache):
+    """Every device-resident backend: ServeEngine tokens == the request
+    alone through greedy_generate, under the full serving config (W4A8 +
+    KV8 + quantized attention), with prefix sharing active."""
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                       backend=backend)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = get_backend(backend)
+    if b.needs_plan:
+        model.precompile_plans(params)
+        params = model.attach_device_plans(params)
+    max_len, gen = 12, 4
+    prompts = _prompts(cfg, plen=6, n=3, seed=5)
+    eng = ServeEngine(model, params, n_slots=2, max_len=max_len,
+                      page_size=4)
+    for p in prompts:
+        eng.submit(p, gen)
+    done = eng.run()
+    assert len(done) == len(prompts)
+    assert eng.counters["pages_shared"] > 0    # sharing actually engaged
+    for r in done:
+        ref = _reference(model, params, list(r.prompt), max_len, gen)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref,
+                                      err_msg=f"rid={r.rid} {backend}")
+
+
+def test_kv8_shares_bytes_recomputes_activations(cache):
+    """KV8 pools share pages (per-token quantization is deterministic) but
+    never skip prefill compute — the counters must show both."""
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                       backend="int_dot")
+    assert cfg.kv_cache_bits == 8
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plen = 8
+    prompts = _prompts(cfg, plen=plen, n=3, seed=9)
+    eng = ServeEngine(model, params, n_slots=2, max_len=16, page_size=4)
+    for p in prompts:
+        eng.submit(p, 3)
+    done = eng.run()
+    c = eng.counters
+    # match is capped at (8-1)//4 = 1 page, so both sharers take one
+    assert c["pages_shared"] == 2
+    assert c["prefill_skipped"] == 8           # bytes skipped, shared rows
+    assert c["prefill_computed"] == 3 * plen   # ... but compute never is
+    for r in done:
+        ref = _reference(model, params, list(r.prompt), 16, 3)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+
+
+# -- scheduler ---------------------------------------------------------------
+
+def test_more_requests_than_slots(fp_cell):
+    """5 requests through 2 slots: all finish, slots turn over, the page
+    pool returns to its idle level (trie-held pages only)."""
+    model, params = fp_cell
+    prompts = _prompts(model.cfg, plen=5, n=5, seed=3)
+    eng = ServeEngine(model, params, n_slots=2, max_len=8, page_size=4)
+    rids = [eng.submit(p, 4) for p in prompts]
+    done = eng.run()
+    assert sorted(r.rid for r in done) == rids
+    assert eng.counters["completed"] == 5
+    assert not eng.active and not eng.queue
+    assert all(len(r.tokens) == 4 for r in done)
+    # finished requests released their pages; only the trie still holds
+    assert eng.alloc.used == eng.trie.stats()["pages"]
+    for r in done:
+        ref = _reference(model, params, list(r.prompt), 8, 4)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+
+
+def test_lazy_page_growth_across_boundary(fp_cell):
+    """Decode allocates pages lazily when a request's length crosses a
+    page boundary mid-generation."""
+    model, params = fp_cell
+    prompt = _prompts(model.cfg, plen=5, n=1, seed=13)[0]
+    eng = ServeEngine(model, params, n_slots=1, max_len=16, page_size=4)
+    eng.submit(prompt, 8)                 # rows 5..11: pages 2 and 3 lazily
+    (req,) = eng.run()
+    assert len(req.page_ids) == 3         # ceil(12 / 4): grown from 2
+    ref = _reference(model, params, prompt, 16, 8)
+    np.testing.assert_array_equal(np.asarray(req.tokens), ref)
+
+
+def test_eos_stops_early(fp_cell):
+    model, params = fp_cell
+    prompt = _prompts(model.cfg, plen=5, n=1, seed=17)[0]
+    eng = ServeEngine(model, params, n_slots=1, max_len=16, page_size=4)
+    ref = _reference(model, params, prompt, 16, 6).tolist()
+    eos = ref[2]
+    eng.submit(prompt, 6, eos_id=eos)
+    (req,) = eng.run()
+    # stops AT the first eos occurrence (which may be earlier than idx 2
+    # if the greedy stream happens to repeat the token)
+    assert req.tokens == ref[:ref.index(eos) + 1]
+
+
+def test_run_stall_raises(fp_cell):
+    """A request that can never be admitted (pool smaller than its prompt)
+    stalls loudly instead of spinning forever."""
+    model, params = fp_cell
+    eng = ServeEngine(model, params, n_slots=1, max_len=8, page_size=4,
+                      n_pages=2)          # 1 usable page, prompt needs 2
+    eng.submit(list(range(5)), 2)
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+
+
+def test_requires_paged_support(fp_cell):
+    _, params = fp_cell
+    cfg = get_reduced("recurrentgemma_9b")     # non-attn blocks
+    with pytest.raises(NotImplementedError, match="paged"):
+        ServeEngine(Model(cfg), params, max_len=8, page_size=4)
+
+
+# -- bench contract ----------------------------------------------------------
+
+def test_serve_engine_bench_emits_tokens_per_s(cache):
+    """The BENCH_engine.json ``serve_engine`` entry: throughput series +
+    prefix counters (the CI perf-trajectory contract)."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.bench_kernel import serve_engine_bench
+    finally:
+        sys.path.remove(ROOT)
+    r = serve_engine_bench(smoke=True)
+    assert r["tokens_per_s"] > 0
+    assert r["total_tokens"] == r["n_requests"] * r["gen"]
+    assert r["series"] and r["series"][-1]["tokens"] == r["total_tokens"]
+    assert len(r["ttft_s"]) == r["n_requests"]
+    assert r["counters"]["pages_shared"] > 0
+    assert r["counters"]["completed"] == r["n_requests"]

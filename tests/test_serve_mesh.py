@@ -136,6 +136,31 @@ def test_jitted_steps_memoised_across_calls(fp_model):
                                                                  False)
 
 
+def test_jit_memo_keys_include_mesh(fp_model):
+    """The _STEP_JITS memo keys carry the ambient mesh: a step traced
+    under ``set_mesh`` bakes the mesh into its sharding constraints, but
+    jit's own cache only keys on avals — interleaved mesh / no-mesh
+    ``greedy_generate`` calls must get distinct jit objects, and the
+    tokens must not drift across the interleaving."""
+    model, params, batch = fp_model
+    mesh = _data_mesh(1)
+    assert _jit_prefill(model, 32) is not _jit_prefill(model, 32, mesh)
+    assert _jit_prefill(model, 32, mesh) is _jit_prefill(model, 32, mesh)
+    assert _jit_decode_step(model, True) is not \
+        _jit_decode_step(model, True, mesh)
+    assert _jit_decode_step(model, True, mesh) is \
+        _jit_decode_step(model, True, mesh)
+    # mesh -> no-mesh -> mesh interleaving: bit-identical throughout
+    t_plain = np.asarray(greedy_generate(model, params, batch,
+                                         max_len=32, n_steps=4))
+    t_mesh = np.asarray(greedy_generate(model, params, batch,
+                                        max_len=32, n_steps=4, mesh=mesh))
+    t_plain2 = np.asarray(greedy_generate(model, params, batch,
+                                          max_len=32, n_steps=4))
+    np.testing.assert_array_equal(t_plain, t_mesh)
+    np.testing.assert_array_equal(t_plain, t_plain2)
+
+
 # -- sharding.spec non-divisibility warning ---------------------------------
 
 class _FakeMesh:
