@@ -1,0 +1,134 @@
+"""Tracelint CLI — the serving-invariant gate CI runs per device leg.
+
+  PYTHONPATH=src python -m repro.analysis.lint \\
+      [--backend engine_jit ...] [--mesh data=4] [--rules r1,r2] \\
+      [--baseline FILE | --write-baseline FILE] [--json OUT] [--list-rules]
+
+Builds every registered backend's serving programs (prefill, donated
+decode, paged decode, the DevicePlan forest — ``analysis/programs.py``)
+and runs every registered rule against them, honoring each backend's
+``lint_exempt`` capability tags. Default backend set: every ``cpu_ok``
+backend — the same enumeration the CI serve smoke loops, so a future
+``engine_tpu``/``engine_gpu`` is linted the day it registers (on
+hardware legs, via ``--backend``).
+
+Exit status 1 iff any non-baselined error-severity finding remains;
+``--json`` writes the full findings list (CI uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.analysis.baseline import (load_baseline, save_baseline,
+                                     split_baselined)
+from repro.analysis.programs import lint_backend
+from repro.analysis.rules import get_rule, list_rules
+from repro.core.backend import get_backend, list_backends
+
+
+def _cpu_ok_backends() -> list[str]:
+    return [n for n in list_backends() if get_backend(n).cpu_ok]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static-analysis gate over every backend's serving "
+                    "programs (rule catalog: docs/ANALYSIS.md)")
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=list_backends(), metavar="NAME",
+                    help="lint this backend (repeatable; default: every "
+                    "cpu_ok backend in the registry)")
+    ap.add_argument("--mesh", default=None, metavar="AXIS=N[,AXIS=N]",
+                    help="lint under a device mesh, e.g. 'data=4' — adds "
+                    "the sharding-integrity evidence (CPU: set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--rules", default=None, metavar="R1,R2",
+                    help="restrict to a comma-separated rule subset")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="allowlist of known findings (Finding.key lines); "
+                    "baselined findings report but do not fail")
+    ap.add_argument("--write-baseline", default=None, metavar="FILE",
+                    help="snapshot current findings as a baseline and exit "
+                    "0")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="write the findings report as JSON (CI artifact)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in list_rules():
+            r = get_rule(name)
+            print(f"{name:22s} [{r.severity}] ({r.requires}) "
+                  f"{r.description}")
+        return 0
+
+    only = tuple(args.rules.split(",")) if args.rules else None
+    if only:
+        for r in only:
+            get_rule(r)                     # loud unknown-rule error
+    baseline = load_baseline(args.baseline)
+    backends = args.backend or _cpu_ok_backends()
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
+
+    all_findings, report = [], []
+    t0 = time.time()
+    for name in backends:
+        b = get_backend(name)
+        progs, findings = lint_backend(name, mesh=mesh, only=only,
+                                       batch=args.batch, arch=args.arch)
+        all_findings.extend(findings)
+        exempt = sorted(getattr(b, "lint_exempt", ()))
+        report.append({
+            "backend": name,
+            "programs": [p.name for p in progs],
+            "lint_exempt": exempt,
+            "findings": [f.to_json() for f in findings],
+        })
+        status = (f"{len(findings)} finding(s)" if findings else "clean")
+        ex = f" (exempt: {', '.join(exempt)})" if exempt else ""
+        print(f"[tracelint] {name:14s} {len(progs)} programs -> "
+              f"{status}{ex}")
+        for f in findings:
+            print(f"  {f.format()}")
+
+    if args.write_baseline:
+        n = save_baseline(args.write_baseline, all_findings)
+        print(f"[tracelint] wrote {n} baseline key(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    new, suppressed = split_baselined(all_findings, baseline)
+    failing = [f for f in new if f.severity == "error"]
+    dt = time.time() - t0
+    summary = {
+        "backends": backends,
+        "mesh": args.mesh,
+        "rules": list(only) if only else list(list_rules()),
+        "findings": len(all_findings),
+        "baselined": len(suppressed),
+        "failing": len(failing),
+        "seconds": round(dt, 2),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"summary": summary, "backends": report}, f,
+                      indent=2)
+    print(f"[tracelint] {len(backends)} backend(s)"
+          f"{' on mesh ' + args.mesh if args.mesh else ''}: "
+          f"{len(all_findings)} finding(s), {len(suppressed)} baselined, "
+          f"{len(failing)} failing ({dt:.1f}s)")
+    return 1 if failing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

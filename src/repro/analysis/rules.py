@@ -1,0 +1,393 @@
+"""Tracelint rules: the serving-path invariants as registered objects.
+
+The repo's performance story rests on *structural* properties of the
+lowered programs — the paper's premise that the computation's structure
+(the transitive DAG, its execution order) is analyzable ahead of time.
+Each property is one :class:`Rule` in a process-level registry mirroring
+``core/backend.py``'s style (``register_rule`` / ``get_rule`` /
+``list_rules``): serving, CI and tests enumerate rules instead of
+hardcoding assertion lists, and a new invariant drops in without touching
+the driver.
+
+A rule inspects one :class:`LintProgram` — a traced jaxpr plus, when the
+check needs them, the lowered StableHLO text (buffer donation is only
+visible there), the live arrays a program ran on (shardings are only
+visible there), and the mesh. Every violation is a :class:`Finding`
+carrying the offending primitive, the equation path inside the (possibly
+deeply nested) jaxpr, and a severity; findings key into an allowlist
+baseline (``analysis/baseline.py``) so new violations fail while known
+ones stay explicit.
+
+Built-in rules:
+
+``no-host-callback``
+    no ``pure_callback`` / ``io_callback`` / ``debug_callback`` anywhere
+    in a serving program — a host round-trip per decode step is the
+    failure mode PR 3 retired.
+``gather-only-levels``
+    no scatter-family primitive inside a ``scan``/``while`` body — the
+    DevicePlan level loops advance by gathers only (the one legal scatter,
+    direct dispatch, runs once per call *outside* the loop).
+``static-shapes``
+    every equation's output shape is a concrete integer tuple, and no
+    ``while`` loops (data-dependent trip counts make the execution
+    schedule no longer signature-determined).
+``kv-donation``
+    the decode jit really aliases its KV cache buffers — read from the
+    lowered HLO's input-output aliasing, not from the donation *request*
+    (which lowering may silently drop).
+``dtype-purity``
+    no bf16/f16 intermediates inside quantize subgraphs (the PR-6 KV8
+    divergence class: a bf16 scale rounds differently depending on XLA
+    fusion), and no float64 anywhere (silent x64/weak-type promotion).
+``sharding-integrity``
+    under a multi-device mesh, no large array the program materialised is
+    silently fully replicated — the runtime twin of
+    ``ShardingDropWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+import jax
+
+from repro.analysis.walker import (CALLBACK_PRIMS, SCATTER_PRIMS,
+                                   iter_eqns)
+
+__all__ = ["Finding", "LintProgram", "Rule", "register_rule",
+           "unregister_rule", "get_rule", "list_rules", "run_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, locatable and baselinable."""
+    rule: str
+    severity: str                 # "error" | "warning"
+    program: str                  # "decode", "prefill", "forest", ...
+    backend: str | None
+    path: str                     # equation path ("" = program-level)
+    primitive: str | None
+    message: str
+
+    def key(self) -> str:
+        """Baseline key: stable across unrelated jaxpr edits (no equation
+        path — the path is for humans, the key is for the allowlist)."""
+        return "::".join((self.rule, self.backend or "-", self.program,
+                          self.primitive or "-"))
+
+    def format(self) -> str:
+        where = f" at {self.path}" if self.path else ""
+        return (f"[{self.severity}] {self.rule} ({self.program}"
+                f"{', backend=' + self.backend if self.backend else ''})"
+                f"{where}: {self.message}")
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["key"] = self.key()
+        return d
+
+
+@dataclasses.dataclass
+class LintProgram:
+    """One lintable serving program with everything rules may inspect.
+
+    ``jaxpr`` feeds the structural rules; ``lowered_text`` (StableHLO,
+    from ``jit(...).lower(...).as_text()``) feeds ``kv-donation``;
+    ``arrays`` (label -> pytree of live arrays) + ``mesh`` feed
+    ``sharding-integrity``. ``donate_expect`` maps a label to the
+    ``[start, stop)`` range of flattened argument indices whose buffers
+    the program promises to donate. ``rules`` names the rules this
+    program is subject to — the driver intersects it with the backend's
+    ``lint_exempt`` tags (core/backend.py).
+    """
+    name: str
+    rules: tuple[str, ...]
+    backend: str | None = None
+    jaxpr: Any = None                                   # ClosedJaxpr
+    lowered_text: str | None = None
+    donate_expect: dict[str, tuple[int, int]] | None = None
+    mesh: Any = None
+    arrays: dict[str, Any] | None = None
+    quantize_scopes: tuple[str, ...] = ("quantize_kv",)
+
+
+class Rule:
+    """Base class for one serving-path invariant.
+
+    ``requires`` declares which :class:`LintProgram` field the rule reads
+    (``"jaxpr"``, ``"lowered_text"`` or ``"arrays"``); the driver skips
+    the rule with no finding when a program does not carry that evidence
+    (e.g. no mesh -> no sharding check) — absence of evidence is a
+    program-construction concern, not a violation.
+    """
+    name: str = ""
+    severity: str = "error"
+    requires: str = "jaxpr"
+    description: str = ""
+
+    def check(self, prog: LintProgram) -> list[Finding]:
+        raise NotImplementedError
+
+    def _finding(self, prog: LintProgram, message: str, *,
+                 path: str = "", primitive: str | None = None) -> Finding:
+        return Finding(rule=self.name, severity=self.severity,
+                       program=prog.name, backend=prog.backend,
+                       path=path, primitive=primitive, message=message)
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(name={self.name!r}, "
+                f"severity={self.severity!r}, requires={self.requires!r})")
+
+
+# ---------------------------------------------------------------------------
+# Registry (core/backend.py's shape: loud duplicates, listed unknowns)
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule, *, replace: bool = False) -> Rule:
+    name = getattr(rule, "name", "")
+    if not name or not isinstance(name, str):
+        raise ValueError(f"rule must declare a non-empty string name, "
+                         f"got {name!r}")
+    if name in _REGISTRY and not replace:
+        raise ValueError(f"rule '{name}' is already registered "
+                         f"({_REGISTRY[name]!r}); pass replace=True to "
+                         f"override")
+    _REGISTRY[name] = rule
+    return rule
+
+
+def unregister_rule(name: str) -> Rule:
+    if name not in _REGISTRY:
+        raise KeyError(_unknown_msg(name))
+    return _REGISTRY.pop(name)
+
+
+def list_rules() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def _unknown_msg(name) -> str:
+    return (f"unknown rule {name!r}; registered rules: "
+            f"{', '.join(sorted(_REGISTRY))}")
+
+
+def get_rule(name: str) -> Rule:
+    try:
+        return _REGISTRY[name]
+    except (KeyError, TypeError):
+        raise KeyError(_unknown_msg(name)) from None
+
+
+def run_rules(prog: LintProgram, *, exempt: frozenset[str] = frozenset(),
+              only: tuple[str, ...] | None = None) -> list[Finding]:
+    """Run every rule named in ``prog.rules`` (minus ``exempt``, and
+    intersected with ``only`` when given) that has its required evidence."""
+    out: list[Finding] = []
+    for name in prog.rules:
+        if name in exempt or (only is not None and name not in only):
+            continue
+        rule = get_rule(name)
+        if getattr(prog, rule.requires, None) is None:
+            continue
+        out.extend(rule.check(prog))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in rules
+# ---------------------------------------------------------------------------
+
+class NoHostCallback(Rule):
+    """Serving programs lower with zero host callbacks."""
+    name = "no-host-callback"
+    description = ("no pure_callback / io_callback / debug_callback in the "
+                   "lowered program (PR 3 retired the callback hot path)")
+
+    def check(self, prog):
+        out = []
+        for site in iter_eqns(prog.jaxpr):
+            if site.primitive in CALLBACK_PRIMS:
+                cb = site.eqn.params.get("callback")
+                detail = f" ({cb})" if cb is not None else ""
+                out.append(self._finding(
+                    prog, f"host callback '{site.primitive}'{detail} in a "
+                    f"serving program — decode/prefill must stay on "
+                    f"device", path=site.path, primitive=site.primitive))
+        return out
+
+
+class GatherOnlyLevels(Rule):
+    """DevicePlan level loops advance by gathers only."""
+    name = "gather-only-levels"
+    description = ("no scatter-family primitive inside a scan/while body; "
+                   "the forest's one legal scatter (direct dispatch) runs "
+                   "once per call outside the level loop")
+
+    def check(self, prog):
+        out = []
+        for site in iter_eqns(prog.jaxpr):
+            if site.primitive in SCATTER_PRIMS and site.in_loop:
+                out.append(self._finding(
+                    prog, f"'{site.primitive}' inside a loop body — level "
+                    f"loops must be gather-only (psum[src] + x[xsrc]); a "
+                    f"scatter per level serializes the forest",
+                    path=site.path, primitive=site.primitive))
+        return out
+
+
+class StaticShapes(Rule):
+    """Shapes (and the execution schedule) are signature-determined."""
+    name = "static-shapes"
+    description = ("every output shape is a concrete int tuple and there "
+                   "are no while loops (data-dependent trip counts)")
+
+    def check(self, prog):
+        out = []
+        for site in iter_eqns(prog.jaxpr):
+            if site.primitive == "while":
+                out.append(self._finding(
+                    prog, "'while' loop: trip count is data-dependent, so "
+                    "the execution schedule is no longer a pure function "
+                    "of the input signature (use a bounded lax.scan)",
+                    path=site.path, primitive="while"))
+            for v in site.eqn.outvars:
+                shape = getattr(v.aval, "shape", ())
+                bad = [d for d in shape
+                       if not isinstance(d, (int, np.integer))]
+                if bad:
+                    out.append(self._finding(
+                        prog, f"dynamic dimension(s) {bad} in output aval "
+                        f"{v.aval} — shapes must be signature-determined",
+                        path=site.path, primitive=site.primitive))
+        return out
+
+
+# one %argN declaration with its attribute dict in StableHLO text
+_ARG_RE = re.compile(r"%arg(\d+): tensor<[^>]*>\s*(\{[^}]*\})?")
+
+
+def aliased_args(lowered_text: str) -> set[int]:
+    """Flattened argument indices the lowered module marks as donated —
+    the lowering-level truth about donation.
+
+    Single-device lowering aliases each donated input to a concrete
+    output (``tf.aliasing_output = N``); under a mesh the pairing is
+    deferred to the compiler and the input carries ``jax.buffer_donor``
+    instead. Either marker means the buffer is really donated.
+    """
+    return {int(m.group(1)) for m in _ARG_RE.finditer(lowered_text)
+            if m.group(2) and ("tf.aliasing_output" in m.group(2)
+                               or "jax.buffer_donor" in m.group(2))}
+
+
+class KvDonation(Rule):
+    """Decode really donates its KV cache buffers."""
+    name = "kv-donation"
+    requires = "lowered_text"
+    description = ("the decode jit's lowered HLO aliases every KV-cache "
+                   "input buffer to an output (donate_argnums that "
+                   "lowering dropped = a full cache copy per token)")
+
+    def check(self, prog):
+        if not prog.donate_expect:
+            return []
+        got = aliased_args(prog.lowered_text)
+        out = []
+        for label, (start, stop) in prog.donate_expect.items():
+            missing = sorted(set(range(start, stop)) - got)
+            if missing:
+                out.append(self._finding(
+                    prog, f"{len(missing)}/{stop - start} {label} buffers "
+                    f"are NOT aliased in the lowered HLO (flat arg indices "
+                    f"{missing}) — every decode step pays a full copy of "
+                    f"those buffers", path=label))
+        return out
+
+
+class DtypePurity(Rule):
+    """Quantize subgraphs stay in f32/int; nothing promotes to f64."""
+    name = "dtype-purity"
+    description = ("no bf16/f16 intermediates inside quantize scopes "
+                   "(jax.named_scope'd, e.g. _quantize_kv — the PR-6 KV8 "
+                   "divergence class) and no float64 anywhere")
+
+    def check(self, prog):
+        out = []
+        scopes = frozenset(prog.quantize_scopes)
+        for site in iter_eqns(prog.jaxpr):
+            for v in site.eqn.outvars:
+                dt = getattr(v.aval, "dtype", None)
+                if dt is None:
+                    continue
+                if str(dt) == "float64":
+                    out.append(self._finding(
+                        prog, f"float64 output aval {v.aval} — silent "
+                        f"x64/weak-type promotion in a serving program",
+                        path=site.path, primitive=site.primitive))
+                elif str(dt) in ("bfloat16", "float16") \
+                        and site.scopes & scopes:
+                    scope = ", ".join(sorted(site.scopes & scopes))
+                    out.append(self._finding(
+                        prog, f"{dt} intermediate inside quantize scope "
+                        f"'{scope}' — quantization arithmetic must run in "
+                        f"f32 or the stored (int8, scale) pair becomes "
+                        f"XLA-fusion-dependent (the PR-6 KV8 divergence)",
+                        path=site.path, primitive=site.primitive))
+        return out
+
+
+class ShardingIntegrity(Rule):
+    """No silent full replication of large arrays under a mesh."""
+    name = "sharding-integrity"
+    requires = "arrays"
+    description = ("under a multi-device mesh, large arrays a program "
+                   "materialised (KV caches) must not be fully replicated "
+                   "— the runtime twin of ShardingDropWarning")
+    min_bytes: int = 1024
+
+    def _mesh_devices(self, mesh) -> int:
+        shape = getattr(mesh, "shape", None)
+        if shape is None:
+            return 1
+        n = 1
+        for v in dict(shape).values():
+            n *= int(v)
+        return n
+
+    def check(self, prog):
+        if prog.mesh is None or self._mesh_devices(prog.mesh) <= 1:
+            return []        # nothing to shard over
+        out = []
+        for label, tree in (prog.arrays or {}).items():
+            leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+            for path, leaf in leaves:
+                sharding = getattr(leaf, "sharding", None)
+                if sharding is None:
+                    continue
+                nbytes = getattr(
+                    leaf, "nbytes",
+                    int(np.prod(getattr(leaf, "shape", ()) or (1,))))
+                if nbytes < self.min_bytes:
+                    continue
+                if sharding.is_fully_replicated:
+                    where = label + jax.tree_util.keystr(path)
+                    out.append(self._finding(
+                        prog, f"array '{where}' "
+                        f"{tuple(getattr(leaf, 'shape', ()))} "
+                        f"({nbytes} bytes) is fully replicated on a "
+                        f"{self._mesh_devices(prog.mesh)}-device mesh — "
+                        f"a dropped sharding multiplies memory and wastes "
+                        f"every device but one", path=where))
+        return out
+
+
+for _r in (NoHostCallback(), GatherOnlyLevels(), StaticShapes(),
+           KvDonation(), DtypePurity(), ShardingIntegrity()):
+    register_rule(_r)
+del _r

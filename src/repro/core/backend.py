@@ -108,6 +108,14 @@ class TransitiveBackend:
         the CPU runner can satisfy this backend (Pallas kernels via
         interpret mode count). CI uses this to skip accelerator-only
         backends.
+
+    ``lint_exempt`` tags which tracelint rules (repro.analysis —
+    ``list_rules()`` names) do NOT apply to this backend, with a reason
+    per tag in the class docstring. The lint gate runs every other rule
+    against the backend's serving programs; an exemption is a declared
+    capability, not an escape hatch — e.g. the host ``engine`` oracle is
+    exempt from ``no-host-callback`` because being a callback is its
+    contract.
     """
     name: str = ""
     device_resident: bool = False
@@ -115,6 +123,7 @@ class TransitiveBackend:
     supports_jit: bool = True
     needs_plan: bool = False
     cpu_ok: bool = True
+    lint_exempt: frozenset[str] = frozenset()
 
     # -- lifecycle ---------------------------------------------------------
     def plan(self, w: np.ndarray, cfg: EngineConfig) -> ExecutionPlan | None:
@@ -158,6 +167,14 @@ class TransitiveBackend:
     # -- introspection -----------------------------------------------------
     def capabilities(self) -> dict[str, bool]:
         return {f: bool(getattr(self, f)) for f in CAPABILITY_FLAGS}
+
+    def lint_profile(self) -> dict[str, bool]:
+        """rule name -> applies-to-this-backend, over the tracelint rule
+        registry (repro.analysis). The lint driver consults
+        ``lint_exempt`` directly; this is the introspection twin of
+        :meth:`capabilities` for reports and the registry CLI."""
+        from repro.analysis import list_rules
+        return {r: r not in self.lint_exempt for r in list_rules()}
 
     def __repr__(self) -> str:
         caps = ", ".join(f for f in CAPABILITY_FLAGS if getattr(self, f))
@@ -318,9 +335,14 @@ class EngineHostBackend(TransitiveBackend):
     oracle next to core/transitive_ref.py. A plan resolved at dispatch
     time (the protocol's ``plan`` argument) is executed run-only with no
     further cache traffic; with ``plan=None`` (the weight was a tracer)
-    the callback resolves it from the process plan cache per call."""
+    the callback resolves it from the process plan cache per call.
+
+    ``lint_exempt``: being a ``pure_callback`` is this backend's contract
+    (it exists to differential-test the device paths), so
+    ``no-host-callback`` does not apply to its serving programs."""
     name = "engine"
     needs_plan = True
+    lint_exempt = frozenset({"no-host-callback"})
 
     def plan(self, w, cfg):
         from repro.core import plancache

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core import energy as E
 from repro.core import bitslice
-from repro.core.patterns import TileStats, tile_stats
+from repro.core.patterns import tile_stats
 from repro.core.scoreboard import dynamic_scoreboard
 
 __all__ = ["Gemm", "AcceleratorModel", "TransitiveArrayModel",

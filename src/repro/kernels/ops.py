@@ -5,7 +5,6 @@ interpret mode elsewhere (the CPU container validates kernel semantics).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

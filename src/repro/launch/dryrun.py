@@ -43,7 +43,7 @@ def cell_skip_reason(cfg, shape) -> str | None:
 
 
 def lower_train(cfg, shape, mesh):
-    from repro.train.train_step import make_train_step, make_optimizer
+    from repro.train.train_step import make_train_step
     from repro.optim.schedule import cosine_schedule
     model, opt, sshape, bshape, sspec, bspec = S.train_cell_specs(
         cfg, shape, mesh)

@@ -39,6 +39,11 @@ report prints per-request TTFT/latency, aggregate tokens/s, and the
 prefix-reuse counters. Tokens stay bit-identical to running each request
 alone through the one-shot path.
 
+``--lint`` runs the tracelint preflight (``repro.analysis``) over the
+selected backend's serving programs under the selected mesh before any
+weight is initialised, and refuses to serve on any error finding — the
+same gate CI runs, one flag away at launch time.
+
 ``--path`` is the deprecated spelling of ``--backend``.
 """
 from __future__ import annotations
@@ -142,6 +147,12 @@ def main():
                     help="(--continuous) tokens per KV page")
     ap.add_argument("--slots", type=int, default=2,
                     help="(--continuous) packed decode batch slots")
+    ap.add_argument("--lint", action="store_true",
+                    help="tracelint preflight: before serving, lint the "
+                    "selected backend's serving programs (prefill / "
+                    "donated decode / paged decode / forest) under the "
+                    "selected mesh and refuse to serve on any error "
+                    "finding (rule catalog: docs/ANALYSIS.md)")
     ap.add_argument("--no-precompile", action="store_true",
                     help="skip the offline plan warmup (planned backends "
                     "only; plans then build lazily on first forward per "
@@ -156,6 +167,25 @@ def main():
     backend = get_backend(name)
 
     mesh = make_serve_mesh(args.mesh) if args.mesh else None
+
+    if args.lint:
+        # preflight on the reduced arch (same programs, small trace): the
+        # invariants are structural, so a violation there is a violation
+        # at full size too — and the gate stays cheap enough to be on.
+        from repro.analysis.programs import lint_backend
+        t0 = time.time()
+        _, findings = lint_backend(name, mesh=mesh, arch=args.arch,
+                                   batch=args.batch,
+                                   w_bits=args.w_bits)
+        errors = [f for f in findings if f.severity == "error"]
+        for f in findings:
+            print(f"[tracelint] {f.format()}")
+        print(f"[tracelint] preflight {name}: {len(findings)} finding(s) "
+              f"({time.time() - t0:.1f}s)")
+        if errors:
+            ap.error(f"tracelint preflight failed with {len(errors)} "
+                     f"error finding(s); serve refused (run python -m "
+                     f"repro.analysis.lint --backend {name} to inspect)")
 
     base = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = base if args.fp else serve_config(base, w_bits=args.w_bits,

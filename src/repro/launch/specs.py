@@ -14,7 +14,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.distributed.sharding import param_specs, spec
 from repro.models.model import Model
-from repro.optim import AdamW
 from repro.quant import QuantConfig
 
 __all__ = ["serve_config", "train_cell_specs", "serve_cell_specs",

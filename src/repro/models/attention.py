@@ -62,8 +62,14 @@ def _quantize_kv(t: jnp.ndarray):
     store different scale bytes. Quantizing from f32 makes the stored
     (int8, scale) pair a pure function of the row values, program-shape
     independent — the bit-identity contract of repro.serve rests on it.
+
+    The ``jax.named_scope`` tags every equation in this subgraph so the
+    tracelint ``dtype-purity`` rule (repro.analysis) can statically
+    reject any bf16 intermediate that sneaks back in — the rule anchors
+    on the scope name, not on fragile equation positions.
     """
-    return quantize_per_token(t.astype(jnp.float32))
+    with jax.named_scope("quantize_kv"):
+        return quantize_per_token(t.astype(jnp.float32))
 
 
 def _scores(q, k, scale, quant: bool):

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import jax_compat
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import shard, mesh_axis_size
+from repro.distributed.sharding import shard
 from repro.models.attention import rms_norm
 from repro.quant import linear_init, linear_apply
 

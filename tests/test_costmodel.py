@@ -1,5 +1,4 @@
 """Cost/energy/area model checks against the paper's published numbers."""
-import numpy as np
 import pytest
 
 from repro.core.costmodel import (AntModel, BitFusionModel, BitVertModel,

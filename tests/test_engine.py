@@ -226,9 +226,11 @@ def test_device_plan_under_jit_vmap(rng):
     for i in range(3):
         np.testing.assert_array_equal(
             got[i], w.astype(np.int64) @ xb[i].astype(np.int64))
-    jaxpr = str(jax.make_jaxpr(
-        lambda xi: run_device(dplan, xi))(jnp.asarray(xb[0])))
-    assert "pure_callback" not in jaxpr
+    from repro import analysis
+    analysis.assert_clean(
+        lambda xi: run_device(dplan, xi), jnp.asarray(xb[0]),
+        rules=(*analysis.DEFAULT_RULES, "gather-only-levels"),
+        name="run_device")
 
 
 def test_stacked_device_plans_under_scan(rng):
@@ -339,12 +341,13 @@ def test_engine_jit_jaxpr_has_no_pure_callback():
                       backend="engine_jit")
     p = linear_init(jax.random.PRNGKey(0), 128, 16, cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (3, 128), jnp.float32)
-    assert "pure_callback" not in str(
-        jax.make_jaxpr(lambda xi: linear_apply(p, xi, cfg))(x))
-    assert "pure_callback" in str(
-        jax.make_jaxpr(
-            lambda xi: linear_apply(p, xi,
-                                    cfg.with_(backend="engine")))(x))
+    from repro import analysis
+    analysis.assert_clean(lambda xi: linear_apply(p, xi, cfg), x,
+                          name="engine_jit-linear")
+    host = analysis.find_violations(
+        lambda xi: linear_apply(p, xi, cfg.with_(backend="engine")), x,
+        rules=("no-host-callback",), name="engine-linear")
+    assert host and all(f.rule == "no-host-callback" for f in host), host
 
 
 def test_engine_jit_traced_weights_need_attached_plan():

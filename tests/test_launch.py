@@ -1,7 +1,6 @@
 """Launcher-layer units: collective parser, roofline terms, shape specs,
 skip rules, analytic flops — all pure (no 512-device init needed)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS, get_config

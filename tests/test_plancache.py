@@ -377,9 +377,9 @@ def test_model_attach_device_plans_end_to_end(cache):
         params, batch)
     np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_i))
 
-    jaxpr = str(jax.make_jaxpr(lambda p, b: model.prefill(p, b, 8))(
-        params_d, batch))
-    assert "pure_callback" not in jaxpr
+    from repro import analysis
+    analysis.assert_clean(lambda p, b: model.prefill(p, b, 8),
+                          params_d, batch, name="prefill")
 
 
 def test_default_cache_swap_restores():

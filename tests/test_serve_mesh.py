@@ -34,15 +34,14 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro import jax_compat
+from repro import analysis, jax_compat
 from repro.configs import get_reduced
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_serve_mesh, parse_mesh_spec
 from repro.launch.specs import serve_config
 from repro.models.model import Model
 from repro.train.serve_step import (_jit_decode_step, _jit_prefill,
-                                    greedy_generate, make_decode_step,
-                                    make_prefill)
+                                    greedy_generate, make_decode_step)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 NDEV = len(jax.devices())
@@ -305,9 +304,8 @@ def test_mesh_decode_jaxpr_callback_free_and_caches_sharded(cache):
         for leaf in jax.tree_util.tree_leaves(caches["body"]):
             assert not leaf.sharding.is_fully_replicated, leaf.sharding
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        jaxpr = str(jax.make_jaxpr(make_decode_step(model))(
-            params_m, caches, tok, jnp.int32(8)))
-    assert "pure_callback" not in jaxpr
+        analysis.assert_clean(make_decode_step(model), params_m, caches,
+                              tok, jnp.int32(8), name="mesh-decode")
 
 
 @pytest.mark.slow
