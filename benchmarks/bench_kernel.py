@@ -186,6 +186,116 @@ def serve_engine_bench(smoke: bool = False, backend: str = "engine_jit",
                           "admitted", "completed")}}
 
 
+def serve_fastpath_bench(smoke: bool = False,
+                         backend: str = "engine_jit") -> dict:
+    """The PR-8 serve fast paths as curves, not points.
+
+    (a) ``paged_kernel``: a ``max_len`` sweep timing one packed decode
+    step through the full-extent gather oracle vs the Pallas live-page
+    kernel at a FIXED small live-page count — the gather cost grows with
+    ``max_len`` while the kernel cost tracks live pages — plus
+    engine-level tokens/s for both paths at the largest swept ``max_len``.
+    (b) ``prefill_bucketed``: the same staggered workload with bucketing
+    on vs off, reporting distinct prefill jit specializations and bucket
+    hits. Lands under ``serve_engine.paged_kernel`` /
+    ``serve_engine.prefill_bucketed`` in BENCH_engine.json.
+    """
+    from repro.configs import get_reduced
+    from repro.core.backend import get_backend
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+    from repro.serve import ServeEngine
+
+    cfg = serve_config(get_reduced("smollm_135m").replace(
+        n_layers=2 if smoke else 4), backend=backend)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = get_backend(backend)
+    if b.needs_plan:
+        model.precompile_plans(params)
+        if b.device_resident:
+            params = model.attach_device_plans(params)
+
+    # page_size 16 and a deep max_len sweep: the gather oracle's per-step
+    # K/V materialization is O(max_len) while the kernel touches only the
+    # fixed live pages (its residual growth is the full-extent softmax +
+    # page-table scan) — the curves separate visibly from ~512 up
+    page_size = 16
+    n_slots = 4
+    live_pages = 2                      # steps fixed -> kernel cost fixed
+    sweep = (256, 512) if smoke else (512, 2048, 8192)
+    iters = 3 if smoke else 10
+    dstep = jax.jit(model.decode_step_paged, static_argnames=("kernel",))
+    curve = []
+    for max_len in sweep:
+        pps = max_len // page_size
+        pool = model.init_page_pool(n_slots * pps + 1, page_size)
+        table = np.zeros((n_slots, pps), np.int32)
+        for s in range(n_slots):
+            table[s, :live_pages] = [s * live_pages + 1 + j
+                                     for j in range(live_pages)]
+        steps = jnp.full((n_slots,), live_pages * page_size - 1, jnp.int32)
+        toks = jnp.ones((n_slots, 1), jnp.int32)
+        tbl = jnp.asarray(table)
+        entry = {"max_len": max_len, "live_pages": live_pages}
+        for kern, key in ((False, "gather_decode_us"),
+                          (True, "kernel_decode_us")):
+            lg, _ = dstep(params, pool, toks, tbl, steps, kernel=kern)
+            jax.block_until_ready(lg)   # compile outside the timed loop
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                lg, _ = dstep(params, pool, toks, tbl, steps, kernel=kern)
+                jax.block_until_ready(lg)
+            entry[key] = (time.perf_counter() - t0) * 1e6 / iters
+        curve.append(entry)
+        emit("serve_engine.paged_kernel", entry["kernel_decode_us"],
+             f"max_len={max_len} live_pages={live_pages}: "
+             f"gather={entry['gather_decode_us']:.0f}us "
+             f"kernel={entry['kernel_decode_us']:.0f}us "
+             f"(x{entry['gather_decode_us']/entry['kernel_decode_us']:.1f})")
+
+    # engine-level throughput at the largest swept max_len, both paths +
+    # bucketing on/off for the specialization counts
+    max_len = sweep[-1]
+    rng = np.random.default_rng(5)
+    plen, gen, n_req = (6, 6, 4) if smoke else (8, 24, 6)
+    prompts = [rng.integers(0, cfg.vocab, size=3 + (i * 5) % (plen - 2)
+                            + 1).tolist() for i in range(n_req)]
+    tput = {}
+    bucketed = {}
+    for kern, bucket_on in ((False, False), (True, True)):
+        eng = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                          page_size=page_size, paged_kernel=kern,
+                          bucket_prefill=bucket_on)
+        submitted = host_step = 0
+        while submitted < n_req or eng.queue or eng.active:
+            if submitted < n_req and host_step >= submitted * 2:
+                eng.submit(prompts[submitted], gen)
+                submitted += 1
+            eng.step()
+            host_step += 1
+        rep = eng.report()
+        st = eng.stats()
+        key = "fastpath" if kern else "oracle"
+        tput[f"tokens_per_s_{key}"] = rep["tokens_per_s"]
+        bucketed["bucketed" if bucket_on else "per_request"] = {
+            "prefill_traces": st["prefill_traces"],
+            "prefill_calls": st["prefill_calls"],
+            "prefill_batched_calls": st["prefill_batched_calls"],
+            "bucket_hits": st["bucket_hits"],
+            "prefill_pad_rows": st["prefill_pad_rows"]}
+    emit("serve_engine.prefill_bucketed", 0.0,
+         f"max_len={max_len} {n_req} reqs: "
+         f"traces per-request={bucketed['per_request']['prefill_traces']} "
+         f"bucketed={bucketed['bucketed']['prefill_traces']} "
+         f"bucket_hits={bucketed['bucketed']['bucket_hits']} | tok/s "
+         f"oracle={tput['tokens_per_s_oracle']:.1f} "
+         f"fastpath={tput['tokens_per_s_fastpath']:.1f}")
+    return {"paged_kernel": {"page_size": page_size, "n_slots": n_slots,
+                             "sweep": curve, **tput},
+            "prefill_bucketed": bucketed}
+
+
 def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
                 backends=None):
     """Cached vs uncached serving + a per-backend decode series.
@@ -349,6 +459,11 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
     # continuous-batching engine: request-level throughput next to the
     # GEMM-level decode series (acceptance key: serve_engine.tokens_per_s)
     result["serve_engine"] = serve_engine_bench(smoke=smoke)
+
+    # PR-8 fast paths: live-page kernel max_len sweep + bucketed-prefill
+    # specialization counts (serve_engine.paged_kernel.* /
+    # serve_engine.prefill_bucketed.*)
+    result["serve_engine"].update(serve_fastpath_bench(smoke=smoke))
 
     # legacy flat aliases for the PR-2/PR-3 trajectory keys
     eng_e = result["backends"].get("engine", {})

@@ -34,6 +34,13 @@ PROGRAM_RULES = {
                "kv-donation", "sharding-integrity"),
     "paged-decode": ("no-host-callback", "static-shapes", "dtype-purity",
                      "kv-donation"),
+    # the PR-8 fast paths: the Pallas live-page decode kernel and the
+    # bucketed batched prefill are held to the same serving invariants as
+    # the oracle paths they shadow, from day one
+    "paged-attention": ("no-host-callback", "static-shapes", "dtype-purity",
+                        "kv-donation"),
+    "prefill-bucketed": ("no-host-callback", "static-shapes",
+                         "dtype-purity"),
     "forest": ("gather-only-levels", "no-host-callback", "static-shapes"),
 }
 
@@ -127,6 +134,41 @@ def build_programs(backend_name: str, *, mesh=None, arch: str = "smollm-135m",
                     page_idx, steps),
                 donate_expect={"kv-page-pool":
                                (n_params, n_params + _n_leaves(pool))}))
+
+            # -- paged decode through the Pallas live-page kernel ----------
+            kernel_fn = lambda p, pl, t, pi, st: \
+                model.decode_step_paged(p, pl, t, pi, st,
+                                        kernel=True)  # noqa: E731
+            progs.append(LintProgram(
+                name="paged-attention", backend=backend_name,
+                rules=PROGRAM_RULES["paged-attention"],
+                jaxpr=jax.make_jaxpr(kernel_fn)(
+                    params, pool, tok, page_idx, steps),
+                lowered_text=_lower_donated(
+                    kernel_fn, (1,), params, pool, tok, page_idx, steps),
+                donate_expect={"kv-page-pool":
+                               (n_params, n_params + _n_leaves(pool))}))
+
+            # -- bucketed batched prefill (one padded bucket shape) --------
+            lb = max(page_size, 8)
+            b_tokens = jnp.zeros((batch, lb), jnp.int32)
+            b_prefix = jnp.zeros((batch, 0), jnp.int32)
+            b_plens = jnp.zeros((batch,), jnp.int32)
+            b_slens = jnp.full((batch,), lb, jnp.int32)
+            b_wp = jnp.zeros((batch, lb), jnp.int32)
+            b_wo = jnp.zeros((batch, lb), jnp.int32)
+            b_wpos = jnp.zeros((batch, lb), jnp.int32)
+            bucketed_fn = lambda p, t, pl, *ix: \
+                model.prefill_paged_batched(
+                    p, t, pl, prefix_page_ids=ix[0], prefix_lens=ix[1],
+                    suffix_lens=ix[2], write_page_ids=ix[3],
+                    write_offs=ix[4], write_pos=ix[5])  # noqa: E731
+            progs.append(LintProgram(
+                name="prefill-bucketed", backend=backend_name,
+                rules=PROGRAM_RULES["prefill-bucketed"],
+                jaxpr=jax.make_jaxpr(bucketed_fn)(
+                    params, b_tokens, pool, b_prefix, b_plens, b_slens,
+                    b_wp, b_wo, b_wpos)))
 
         # -- forest (the DevicePlan level loops, per device backend) -------
         if backend.needs_plan and backend.device_resident:

@@ -52,6 +52,9 @@ class ModelConfig:
     quant: QuantConfig = QuantConfig()
     quant_attention: bool = False    # dynamic int8 attention GEMMs (Sec. 5.7)
     kv_cache_bits: int = 16          # 8 → int8 KV cache + stored scales
+    paged_kernel: bool = False       # paged decode walks live pages via the
+                                     # Pallas kernel (kernels/paged_attention)
+                                     # instead of gathering the full extent
 
     # --- training substrate knobs ---
     dtype: Any = jnp.bfloat16

@@ -71,7 +71,9 @@ def _serve_continuous(model, params, cfg, args, mesh, name):
     ps = args.page_size
     max_len = -(-(args.prompt_len + args.gen) // ps) * ps
     eng = ServeEngine(model, params, n_slots=args.slots, max_len=max_len,
-                      page_size=ps, mesh=mesh)
+                      page_size=ps, mesh=mesh,
+                      paged_kernel=args.paged_kernel,
+                      bucket_prefill=not args.no_bucket_prefill)
     rng = np.random.default_rng(1)
     base = rng.integers(0, cfg.vocab, size=args.prompt_len).tolist()
     # arrival pattern with real prefix structure: even requests replay the
@@ -110,6 +112,12 @@ def _serve_continuous(model, params, cfg, args, mesh, name):
           f"prefill_skipped={c['prefill_skipped']} "
           f"prefill_computed={c['prefill_computed']} | "
           f"pages={c['pages']} trie={c['trie']}")
+    print(f"[fast path] decode={'pallas-kernel' if args.paged_kernel else 'gather'} "
+          f"prefill={'per-request' if args.no_bucket_prefill else 'bucketed'} | "
+          f"jit traces: prefill={c['prefill_traces']} "
+          f"decode={c['decode_traces']} bucket_hits={c['bucket_hits']} "
+          f"batched_calls={c['prefill_batched_calls']} "
+          f"pad_rows={c['prefill_pad_rows']}")
     for r in eng.finished:
         print(f"  req {r.rid}: {r.tokens}")
     return eng
@@ -147,10 +155,18 @@ def main():
                     help="(--continuous) tokens per KV page")
     ap.add_argument("--slots", type=int, default=2,
                     help="(--continuous) packed decode batch slots")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="(--continuous) decode attention through the "
+                    "Pallas live-page kernel (kernels/paged_attention) "
+                    "instead of the full-extent gather oracle")
+    ap.add_argument("--no-bucket-prefill", action="store_true",
+                    help="(--continuous) disable bucketed batched prefill "
+                    "(revert to per-request batch-1 prefills)")
     ap.add_argument("--lint", action="store_true",
                     help="tracelint preflight: before serving, lint the "
                     "selected backend's serving programs (prefill / "
-                    "donated decode / paged decode / forest) under the "
+                    "donated decode / paged decode / paged-attention "
+                    "kernel / bucketed prefill / forest) under the "
                     "selected mesh and refuse to serve on any error "
                     "finding (rule catalog: docs/ANALYSIS.md)")
     ap.add_argument("--no-precompile", action="store_true",

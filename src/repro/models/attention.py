@@ -499,8 +499,113 @@ def apply_attn_paged_prefill(params, x, cfg: ModelConfig, *, pool,
     return y.astype(x.dtype), new_pool
 
 
+def apply_attn_paged_prefill_batched(params, x, cfg: ModelConfig, *, pool,
+                                     prefix_page_ids, prefix_lens,
+                                     suffix_lens, write_page_ids, write_offs,
+                                     write_pos):
+    """Bucket-padded batched prefill: N requests' suffixes in ONE call.
+
+    ``x`` (B, Lb, d) embeds each row's prompt suffix left-aligned and
+    zero-padded to the bucket length Lb; row b's real extent is
+    ``suffix_lens[b]``. ``prefix_page_ids`` (B, PPb) is the trie-shared
+    prefix page table padded with the null page; ``prefix_lens[b]`` (a
+    multiple of page_size) counts the row's real shared positions.
+    Suffix K/V rows are written through ``(write_page_ids, write_offs)``
+    (B, Lb) — ``write_pos[b, i]`` names the suffix row stored by write i,
+    and dead write lanes target the null page. Returns (out, new_pool).
+
+    Parity with the per-request path is per-row exact: positions, masks
+    and stored bytes match :func:`apply_attn_paged_prefill` for every
+    live lane, and padded K/V lanes are zeroed before attention so the
+    int8-PV absmax scale (computed over the full padded extent under
+    ``quant_attention``) sees ``max(|v|, 0) == max|v|`` — identical to
+    the unpadded scale. Shapes are static per (B, Lb, PPb) bucket, which
+    is what bounds the engine's prefill retraces to the bucket set.
+    """
+    from repro.quant import linear_apply
+    qcfg = cfg.quant
+    b, ls, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ps = pool["k"].shape[1]
+    n_pre = prefix_page_ids.shape[1]
+    start = n_pre * ps
+    total = start + ls
+    if total > CHUNK_THRESHOLD:
+        raise NotImplementedError(
+            "bucketed prefill is full-extent only; the engine falls back "
+            "to per-request chunked prefill above CHUNK_THRESHOLD")
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = linear_apply(params["wq"], xn, qcfg).reshape(b, ls, h, hd)
+    k = linear_apply(params["wk"], xn, qcfg).reshape(b, ls, kvh, hd)
+    v = linear_apply(params["wv"], xn, qcfg).reshape(b, ls, kvh, hd)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    q = shard(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    qpos = prefix_lens[:, None] + jnp.arange(ls)[None, :]       # (B, Lb)
+    q = rope(q, qpos, cfg.rope_theta, cfg.rope_2d)
+    k = rope(k, qpos, cfg.rope_theta, cfg.rope_2d)
+    scale = hd ** -0.5
+
+    # scatter each row's suffix K/V through its write lanes; lane i stores
+    # suffix row write_pos[b, i] (rows, not a slice, so KV8 full-recompute
+    # rows can skip re-writing shared pages); dead lanes hit the null page
+    int8_pool = pool["k"].dtype == jnp.int8
+    new_pool = dict(pool)
+    if int8_pool:
+        qk, ks = _quantize_kv(k)
+        qv, vs = _quantize_kv(v)
+        stores = {"k": qk, "v": qv, "ks": ks, "vs": vs}
+    else:
+        stores = {"k": k, "v": v}
+    for name, val in stores.items():
+        rows = jnp.take_along_axis(
+            val, write_pos[:, :, None, None], axis=1)           # (B, Lb, ...)
+        new_pool[name] = pool[name].at[write_page_ids, write_offs].set(
+            rows.astype(pool[name].dtype))
+
+    # full K/V view per row: gathered shared prefix (exact pools only —
+    # the engine guarantees prefix_lens == 0 for KV8) + in-pass suffix.
+    # Padded lanes are zeroed: masked out of the scores anyway, but the
+    # quant-attention PV absmax must not see gathered/padded garbage.
+    suf_idx = jnp.arange(ls)
+    suf_valid = suf_idx[None, :] < suffix_lens[:, None]         # (B, Lb)
+    if n_pre:
+        pre_valid = jnp.arange(start)[None, :] < prefix_lens[:, None]
+        k_pre = pool["k"][prefix_page_ids].reshape(b, start, kvh, hd)
+        v_pre = pool["v"][prefix_page_ids].reshape(b, start, kvh, hd)
+        k_full = jnp.concatenate([k_pre.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([v_pre.astype(v.dtype), v], axis=1)
+        key_valid = jnp.concatenate([pre_valid, suf_valid], axis=1)
+    else:
+        k_full, v_full = k, v
+        key_valid = suf_valid
+    k_full = jnp.where(key_valid[:, :, None, None], k_full, 0)
+    v_full = jnp.where(key_valid[:, :, None, None], v_full, 0)
+    groups = h // kvh
+    kf = _repeat_kv(k_full, groups)
+    vf = _repeat_kv(v_full, groups)
+    # per-row causal mask in logical positions: a prefix lane t is visible
+    # iff real (qpos >= prefix_lens > t always holds); suffix lane j is
+    # visible to query i iff j <= i and j is real — identical lane-for-lane
+    # to the per-request qpos >= kpos mask
+    causal = suf_idx[None, :, None] >= suf_idx[None, None, :]   # (1, Lb, Lb)
+    mask_suf = causal & suf_valid[:, None, :]
+    if n_pre:
+        mask_pre = jnp.broadcast_to(pre_valid[:, None, :], (b, ls, start))
+        mask = jnp.concatenate([mask_pre, mask_suf], axis=2)
+    else:
+        mask = mask_suf
+    out = attend_full(q, kf, vf, mask[:, None], scale, cfg.quant_attention)
+    out = out.reshape(b, ls, h * hd)
+    y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
+    return y.astype(x.dtype), new_pool
+
+
 def apply_attn_paged_decode(params, x, cfg: ModelConfig, *, pool,
-                            page_indices, steps):
+                            page_indices, steps, kernel: bool | None = None):
     """One paged decode step over all slots. x (B, 1, d); page_indices
     (B, P) int32; steps (B,) int32 — the logical position the new token is
     written at (== tokens held so far). Returns (out, new_pool).
@@ -509,6 +614,12 @@ def apply_attn_paged_decode(params, x, cfg: ModelConfig, *, pool,
     their writes land in the null page and their rows are garbage the
     scheduler never reads — the shapes never change, so decode re-traces
     exactly once per engine regardless of arrivals/evictions.
+
+    ``kernel`` (default ``cfg.paged_kernel``) routes attention through the
+    Pallas live-page kernel (:mod:`repro.kernels.paged_attention`), which
+    walks only ``steps // page_size + 1`` pages per slot instead of
+    gathering the full ``pages_per_slot`` extent. The gather +
+    :func:`attend_cached` path below stays as the differential oracle.
     """
     from repro.quant import linear_apply
     qcfg = cfg.quant
@@ -547,14 +658,22 @@ def apply_attn_paged_decode(params, x, cfg: ModelConfig, *, pool,
         new_pool[name] = pool[name].at[page, off].set(
             val[:, 0].astype(pool[name].dtype))
 
-    ck = _gather_pages(new_pool["k"], page_indices)
-    cv = _gather_pages(new_pool["v"], page_indices)
-    cks = _gather_pages(new_pool["ks"], page_indices) if int8_pool else None
-    cvs = _gather_pages(new_pool["vs"], page_indices) if int8_pool else None
-    size = ck.shape[1]
-    valid = jnp.arange(size)[None, :] < \
-        jnp.minimum(steps + 1, size)[:, None]
-    out = attend_cached(q, ck, cv, cks, cvs, valid, cfg, scale)
+    if kernel is None:
+        kernel = cfg.paged_kernel
+    if kernel:
+        from repro.kernels.paged_attention import paged_attention
+        out = paged_attention(q, new_pool, page_indices, steps, cfg, scale)
+    else:
+        ck = _gather_pages(new_pool["k"], page_indices)
+        cv = _gather_pages(new_pool["v"], page_indices)
+        cks = _gather_pages(new_pool["ks"], page_indices) if int8_pool \
+            else None
+        cvs = _gather_pages(new_pool["vs"], page_indices) if int8_pool \
+            else None
+        size = ck.shape[1]
+        valid = jnp.arange(size)[None, :] < \
+            jnp.minimum(steps + 1, size)[:, None]
+        out = attend_cached(q, ck, cv, cks, cvs, valid, cfg, scale)
     out = out.reshape(b, sq, h * hd)
     y = linear_apply(params["wo"], out.astype(x.dtype), qcfg)
     return y.astype(x.dtype), new_pool

@@ -105,19 +105,22 @@ def _apply_superblock_paged(bp: Params, x, cfg: ModelConfig, pattern, *,
                             pool, mode: str, **attn_kw):
     """One super-block pass against a page pool (continuous-batching serve).
 
-    ``mode`` is "prefill" or "decode"; ``attn_kw`` forwards to the paged
-    attention entry point. Residual/MLP structure mirrors
-    :func:`_apply_superblock` exactly — only the KV storage differs."""
+    ``mode`` is "prefill", "prefill_batched" or "decode"; ``attn_kw``
+    forwards to the paged attention entry point. Residual/MLP structure
+    mirrors :func:`_apply_superblock` exactly — only the KV storage
+    differs."""
     new_pool = {}
     sp = "seq_sp" if cfg.seq_shard else None
+    paged_fns = {"prefill": A.apply_attn_paged_prefill,
+                 "prefill_batched": A.apply_attn_paged_prefill_batched,
+                 "decode": A.apply_attn_paged_decode}
     for i, kind in enumerate(pattern):
         if kind != "attn":
             raise NotImplementedError(
                 f"paged serving supports self-attention blocks only, got "
                 f"{kind!r} in pattern {pattern} (recurrent/cross blocks "
                 f"keep per-slot dense state; see repro.serve)")
-        fn = (A.apply_attn_paged_prefill if mode == "prefill"
-              else A.apply_attn_paged_decode)
+        fn = paged_fns[mode]
         y, npl = fn(bp[f"b{i}"], x, cfg, pool=pool[f"c{i}"], **attn_kw)
         x = shard(x + y, "batch", sp, None)
         if f"m{i}" in bp:
@@ -372,19 +375,49 @@ class Model:
         logits = self._logits(params, x[:, -1:])
         return logits, {"body": new_body}
 
+    def prefill_paged_batched(self, params: Params, tokens, pool, *,
+                              prefix_page_ids, prefix_lens, suffix_lens,
+                              write_page_ids, write_offs, write_pos):
+        """Bucket-padded batched prefill: N requests' suffixes in one call.
+
+        ``tokens`` (B, Lb) holds each row's prompt suffix left-aligned and
+        zero-padded to the bucket length; see
+        :func:`repro.models.attention.apply_attn_paged_prefill_batched`
+        for the index-array contract. Returns (per-row last-real-position
+        logits (B, 1, V), new pool). Static per (B, Lb, PPb) bucket."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            bp, pl = xs
+            y, npl = _apply_superblock_paged(
+                bp, carry, cfg, self.pattern, pool=pl,
+                mode="prefill_batched",
+                prefix_page_ids=prefix_page_ids, prefix_lens=prefix_lens,
+                suffix_lens=suffix_lens, write_page_ids=write_page_ids,
+                write_offs=write_offs, write_pos=write_pos)
+            return y, npl
+        x = self._embed_tokens(params, tokens)
+        x, new_body = _scan(body, x, (params["blocks"], pool["body"]))
+        last = jnp.take_along_axis(
+            x, (suffix_lens - 1)[:, None, None].astype(jnp.int32), axis=1)
+        logits = self._logits(params, last)
+        return logits, {"body": new_body}
+
     def decode_step_paged(self, params: Params, pool, tokens, page_indices,
-                          steps):
+                          steps, kernel: bool | None = None):
         """One packed decode step over every slot. tokens (B, 1) int32;
         page_indices (B, P) int32; steps (B,) int32 per-slot positions.
         Returns (logits (B, 1, V), new pool). One fixed shape — zero
-        retraces as requests come and go."""
+        retraces as requests come and go. ``kernel`` (static under jit)
+        selects the Pallas live-page attention path; None defers to
+        ``cfg.paged_kernel``."""
         cfg = self.cfg
 
         def body(carry, xs):
             bp, pl = xs
             y, npl = _apply_superblock_paged(
                 bp, carry, cfg, self.pattern, pool=pl, mode="decode",
-                page_indices=page_indices, steps=steps)
+                page_indices=page_indices, steps=steps, kernel=kernel)
             return y, npl
         x = self._embed_tokens(params, tokens)
         x, new_body = _scan(body, x, (params["blocks"], pool["body"]))

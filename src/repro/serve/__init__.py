@@ -9,8 +9,8 @@ eviction rules. Public surface:
     :class:`~repro.serve.paging.PrefixTrie` — the host-side page
     bookkeeping (refcounted free list; prompt-prefix page sharing).
 """
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, bucket
 from repro.serve.paging import NULL_PAGE, PageAllocator, PrefixTrie
 
 __all__ = ["ServeEngine", "Request", "PageAllocator", "PrefixTrie",
-           "NULL_PAGE"]
+           "NULL_PAGE", "bucket"]

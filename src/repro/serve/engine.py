@@ -5,8 +5,15 @@ needs around the quantized GEMM core: requests ``submit()`` at any time,
 ``step()`` admits arrivals into free batch slots, runs **one packed decode
 step** over every active slot, and retires finished requests — freeing
 their pages and re-opening their slots — without ever retracing. The
-device only ever sees two programs:
+device only ever sees three programs:
 
+  * a **bucketed batched prefill** (``Model.prefill_paged_batched``):
+    pending same-wave prefills whose suffixes round up to the same
+    power-of-two bucket run as ONE padded call, jit-keyed on
+    ``(batch_bucket, suffix_bucket, n_prefix_pages)`` — the bucket set
+    bounds prefill retraces regardless of prompt-length diversity
+    (``bucket_prefill=False`` or an over-``CHUNK_THRESHOLD`` extent
+    falls back to the per-request path below);
   * a per-request **suffix prefill** (``Model.prefill_paged``, batch 1),
     jit-keyed on ``(suffix_len, n_prefix_pages, write_from)``;
   * one fixed-shape **packed decode** (``Model.decode_step_paged``) over
@@ -14,7 +21,11 @@ device only ever sees two programs:
     page table + per-slot ``steps`` — the same static-gather trick
     ``DevicePlan`` uses for forest schedules. Inactive slots point every
     table entry at the null page and carry step 0; their lanes compute
-    garbage that is never read.
+    garbage that is never read. ``paged_kernel=True`` routes its
+    attention through the Pallas live-page kernel
+    (:mod:`repro.kernels.paged_attention`), which walks only each
+    slot's live pages instead of gathering the full ``pages_per_slot``
+    extent.
 
 Prompt prefixes are shared through the :class:`~repro.serve.paging.
 PrefixTrie` at full-page granularity: a request whose prompt extends an
@@ -50,11 +61,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import jax_compat
+from repro.models.attention import CHUNK_THRESHOLD
 from repro.models.model import Model
 from repro.serve.paging import PageAllocator, PrefixTrie
 from repro.train.serve_step import _place_batch
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "bucket"]
+
+
+def bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= ``n``, clamped to ``cap``.
+
+    The bucket set {1, 2, 4, ..., cap} is what bounds the engine's
+    prefill jit specializations: suffix lengths, write widths and batch
+    widths are all padded up to a bucket before reaching the device.
+    """
+    if n < 1:
+        raise ValueError(f"bucket of non-positive {n}")
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 @dataclasses.dataclass
@@ -102,12 +129,18 @@ class ServeEngine:
     arrays placed under the ``batch`` sharding rule (the same serve-cell
     topology as ``greedy_generate(mesh=)``). ``donate=False`` keeps the
     pool un-donated for callers that hold references across steps.
+
+    ``paged_kernel=True`` decodes through the Pallas live-page attention
+    kernel (cost grows with live pages, not ``max_len``);
+    ``bucket_prefill=False`` reverts admission to per-request batch-1
+    prefills. Both default to the pure-jnp oracle paths.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 4,
                  max_len: int = 256, page_size: int = 16,
                  n_pages: int | None = None, mesh=None,
-                 donate: bool = True):
+                 donate: bool = True, paged_kernel: bool = False,
+                 bucket_prefill: bool = True):
         reason = model.supports_paged()
         if reason is not None:
             raise NotImplementedError(f"paged serving: {reason}")
@@ -126,6 +159,8 @@ class ServeEngine:
         self.n_pages = (n_slots * self.pages_per_slot + 1
                         if n_pages is None else n_pages)
         self.mesh = mesh
+        self.paged_kernel = bool(paged_kernel)
+        self.bucket_prefill = bool(bucket_prefill)
         # int8 pools share pages but must not skip prefill compute: the
         # dense reference attends over full-precision K/V while prefilling,
         # and a dequantized prefix would break bit-identity
@@ -142,12 +177,28 @@ class ServeEngine:
         self._prefill = jax.jit(model.prefill_paged,
                                 static_argnames=("write_from",),
                                 donate_argnums=(2,) if donate else ())
+        self._prefill_batched = jax.jit(model.prefill_paged_batched,
+                                        donate_argnums=(2,) if donate
+                                        else ())
         self._decode = jax.jit(model.decode_step_paged,
+                               static_argnames=("kernel",),
                                donate_argnums=(1,) if donate else ())
+        # persistent packed-decode host arrays, updated incrementally on
+        # admit/alloc/finish instead of np.zeros + full refill per step
+        self._tokens = np.zeros((n_slots, 1), np.int32)
+        self._steps = np.zeros((n_slots,), np.int32)
+        self._table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        # distinct jit specializations actually requested, per program —
+        # the observable the bucketing win is measured by
+        self._trace_keys: dict[str, set] = {"prefill": set(),
+                                            "decode": set()}
         self.counters = {"admitted": 0, "completed": 0, "decode_steps": 0,
                          "decode_tokens": 0, "prefix_hits": 0,
                          "pages_shared": 0, "prefill_computed": 0,
-                         "prefill_skipped": 0, "prefill_written": 0}
+                         "prefill_skipped": 0, "prefill_written": 0,
+                         "prefill_calls": 0, "prefill_batched_calls": 0,
+                         "prefill_batched_rows": 0, "prefill_pad_rows": 0,
+                         "bucket_hits": 0}
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -187,8 +238,24 @@ class ServeEngine:
             pid = self.alloc.alloc()
         return pid
 
-    def _admit_one(self, req: Request, slot: int) -> bool:
-        """Prefill ``req`` into pages and seat it; False = no pages yet."""
+    def _note_trace(self, kind: str, key: tuple) -> bool:
+        """Record a jit-specialization key; True when already traced."""
+        keys = self._trace_keys[kind]
+        if key in keys:
+            return True
+        keys.add(key)
+        return False
+
+    def _reserve(self, req: Request) -> dict | None:
+        """Match/pin/allocate ``req``'s prompt pages; None = no pages yet.
+
+        Reserved pages carry the request's refcount, so later same-wave
+        reservations can evict around them but never reclaim them. The
+        prompt is indexed into the trie immediately — a request arriving
+        later in the same wave already shares these pages (the run
+        partitioning in :meth:`_admit` keeps its prefill *after* the
+        batch that writes them).
+        """
         L, ps = len(req.prompt), self.page_size
         n_prompt_pages = -(-L // ps)
         # cap the match so the suffix keeps >= 1 token: the last prompt
@@ -203,9 +270,47 @@ class ServeEngine:
         if self.alloc.free_count < need:
             for pid in shared:
                 self.alloc.decref(pid)
-            return False
+            return None
         page_ids = list(shared) + [self.alloc.alloc() for _ in range(need)]
-        shared_len = len(shared) * ps
+        self.trie.insert(req.prompt, page_ids, self.alloc)
+        return {"req": req, "page_ids": page_ids, "shared": len(shared)}
+
+    def _seat(self, res: dict, tok: int) -> None:
+        """Post-prefill bookkeeping: record token, counters, slot/table."""
+        req = res["req"]
+        L, ps = len(req.prompt), self.page_size
+        shared = res["shared"]
+        shared_len = shared * ps
+        start = shared_len if self.exact_pool else 0
+        req.out.append(tok)
+        req.length = L
+        req.page_ids = res["page_ids"]
+        req.shared_pages = shared
+        req.prefill_computed = L - start
+        req.t_admit = time.perf_counter()
+        req.admit_step = self.step_count
+        self.counters["admitted"] += 1
+        self.counters["prefix_hits"] += bool(shared)
+        self.counters["pages_shared"] += shared
+        self.counters["prefill_computed"] += L - start
+        self.counters["prefill_skipped"] += shared_len
+        self.counters["prefill_written"] += L - shared_len
+        if len(req.out) >= req.max_new_tokens or tok == req.eos_id:
+            self._finish(req)
+        else:
+            slot = self.slots.index(None)
+            req.slot = slot
+            self.slots[slot] = req.rid
+            self.active[req.rid] = req
+            self._tokens[slot, 0] = tok
+            self._steps[slot] = req.length
+            self._table[slot, :len(req.page_ids)] = req.page_ids
+
+    def _prefill_one(self, res: dict) -> None:
+        """Per-request batch-1 prefill (the original, always-exact path)."""
+        req, page_ids = res["req"], res["page_ids"]
+        L, ps = len(req.prompt), self.page_size
+        shared_len = res["shared"] * ps
         if self.exact_pool:
             start, write_from = shared_len, 0   # skip shared compute
         else:
@@ -215,6 +320,9 @@ class ServeEngine:
         wp = np.asarray([page_ids[p // ps] for p in range(shared_len, L)],
                         np.int32)
         wo = np.asarray([p % ps for p in range(shared_len, L)], np.int32)
+        self.counters["prefill_calls"] += 1
+        self._note_trace("prefill", ("one", L - start, start // ps,
+                                     write_from))
         with self._mesh_ctx():
             logits, self.pool = self._prefill(
                 self.params, jnp.asarray(suffix), self.pool,
@@ -223,41 +331,109 @@ class ServeEngine:
                 write_from=write_from)
             tok = int(np.asarray(
                 jnp.argmax(logits[:, -1], -1).astype(jnp.int32))[0])
-        req.out.append(tok)
-        req.length = L
-        req.page_ids = page_ids
-        req.shared_pages = len(shared)
-        req.prefill_computed = L - start
-        req.t_admit = time.perf_counter()
-        req.admit_step = self.step_count
-        self.counters["admitted"] += 1
-        self.counters["prefix_hits"] += bool(shared)
-        self.counters["pages_shared"] += len(shared)
-        self.counters["prefill_computed"] += L - start
-        self.counters["prefill_skipped"] += shared_len
-        self.counters["prefill_written"] += L - shared_len
-        # index the freshly filled prompt pages immediately, so a request
-        # arriving next step (or later this step) can already share them
-        self.trie.insert(req.prompt, page_ids, self.alloc)
-        if len(req.out) >= req.max_new_tokens or tok == req.eos_id:
-            self._finish(req)
-        else:
-            req.slot = slot
-            self.slots[slot] = req.rid
-            self.active[req.rid] = req
-        return True
+        self._seat(res, tok)
+
+    def _bucket_key(self, res: dict) -> tuple:
+        """(suffix_bucket, n_prefix_pages) jit grouping key for a
+        reservation. The prefix page count stays EXACT (not bucketed):
+        padding it would interleave zero lanes mid-extent and shift the
+        suffix lanes' reduction association — trailing suffix/batch
+        padding is the bit-exact kind (see attention.py)."""
+        L, ps = len(res["req"].prompt), self.page_size
+        start = res["shared"] * ps if self.exact_pool else 0
+        return bucket(L - start, self.max_len), start // ps
+
+    def _prefill_group(self, group: list[dict]) -> None:
+        """One padded batched prefill over same-bucket reservations."""
+        ps = self.page_size
+        lb, n_pre = self._bucket_key(group[0])
+        if not self.bucket_prefill or n_pre * ps + lb > CHUNK_THRESHOLD:
+            for res in group:
+                self._prefill_one(res)
+            return
+        nb = bucket(len(group), self.n_slots)
+        tokens = np.zeros((nb, lb), np.int32)
+        prefix = np.zeros((nb, n_pre), np.int32)
+        plens = np.zeros((nb,), np.int32)
+        slens = np.ones((nb,), np.int32)    # dead rows read garbage row 0
+        wp = np.zeros((nb, lb), np.int32)   # dead lanes hit the null page
+        wo = np.zeros((nb, lb), np.int32)
+        wpos = np.zeros((nb, lb), np.int32)
+        for r, res in enumerate(group):
+            req, page_ids = res["req"], res["page_ids"]
+            L = len(req.prompt)
+            shared_len = res["shared"] * ps
+            start = shared_len if self.exact_pool else 0
+            ls = L - start
+            tokens[r, :ls] = req.prompt[start:]
+            plens[r] = start
+            prefix[r, :start // ps] = page_ids[:start // ps]
+            slens[r] = ls
+            for i, p in enumerate(range(shared_len, L)):
+                wp[r, i] = page_ids[p // ps]
+                wo[r, i] = p % ps
+                wpos[r, i] = p - start
+        self.counters["prefill_batched_calls"] += 1
+        self.counters["prefill_batched_rows"] += len(group)
+        self.counters["prefill_pad_rows"] += nb - len(group)
+        if self._note_trace("prefill", ("batched", nb, lb, n_pre)):
+            self.counters["bucket_hits"] += 1
+        with self._mesh_ctx():
+            logits, self.pool = self._prefill_batched(
+                self.params, jnp.asarray(tokens), self.pool,
+                prefix_page_ids=jnp.asarray(prefix),
+                prefix_lens=jnp.asarray(plens),
+                suffix_lens=jnp.asarray(slens),
+                write_page_ids=jnp.asarray(wp), write_offs=jnp.asarray(wo),
+                write_pos=jnp.asarray(wpos))
+            toks = np.asarray(jnp.argmax(logits[:, -1], -1)
+                              .astype(jnp.int32))
+        for r, res in enumerate(group):
+            self._seat(res, int(toks[r]))
 
     def _admit(self) -> None:
         while self.queue and None in self.slots:
-            if not self._admit_one(self.queue[0],
-                                   self.slots.index(None)):
-                break                 # page pressure: retry next step
-            self.queue.popleft()
+            free = self.slots.count(None)
+            wave: list[dict] = []
+            while self.queue and len(wave) < free:
+                res = self._reserve(self.queue[0])
+                if res is None:
+                    break             # page pressure: retry next step
+                self.queue.popleft()
+                wave.append(res)
+            if not wave:
+                break
+            # partition into runs: a reservation whose trie-shared pages
+            # are WRITTEN by an earlier same-wave reservation must prefill
+            # after the batch that fills them — runs flush in order, and
+            # within a run no request reads another's pending writes
+            runs: list[list[dict]] = []
+            cur: list[dict] = []
+            pending_writes: set[int] = set()
+            for res in wave:
+                shared_ids = set(res["page_ids"][:res["shared"]])
+                if cur and (shared_ids & pending_writes):
+                    runs.append(cur)
+                    cur, pending_writes = [], set()
+                cur.append(res)
+                pending_writes |= set(res["page_ids"][res["shared"]:])
+            if cur:
+                runs.append(cur)
+            for run in runs:
+                groups: dict[tuple, list[dict]] = {}
+                for res in run:
+                    groups.setdefault(self._bucket_key(res),
+                                      []).append(res)
+                for group in groups.values():
+                    self._prefill_group(group)
 
     def _finish(self, req: Request) -> None:
         if req.slot is not None:
             self.slots[req.slot] = None
             del self.active[req.rid]
+            self._tokens[req.slot, 0] = 0
+            self._steps[req.slot] = 0
+            self._table[req.slot, :] = 0
             req.slot = None
         for pid in req.page_ids:
             self.alloc.decref(pid)    # trie-held pages survive (refcount)
@@ -281,12 +457,11 @@ class ServeEngine:
         if packed:
             self.step_count += 1
             self.counters["decode_steps"] += 1
-            tokens = np.zeros((self.n_slots, 1), np.int32)
-            steps = np.zeros((self.n_slots,), np.int32)
-            table = np.zeros((self.n_slots, self.pages_per_slot), np.int32)
             for s, req in packed:
                 # this step writes K/V position req.length — grow the
-                # request's table when it crosses a page boundary
+                # request's table when it crosses a page boundary; the
+                # persistent host arrays only take the per-slot deltas
+                # (_seat/_finish maintain the rest)
                 if req.length // self.page_size >= len(req.page_ids):
                     pid = self._alloc_page()
                     if pid is None:
@@ -294,17 +469,20 @@ class ServeEngine:
                             f"page pool exhausted ({self.alloc!r}) — "
                             f"size n_pages for the slot working set")
                     req.page_ids.append(pid)
-                tokens[s, 0] = req.out[-1]
-                steps[s] = req.length
-                table[s, :len(req.page_ids)] = req.page_ids
-            batch = {"tokens": tokens, "table": table, "steps": steps}
+                    self._table[s, len(req.page_ids) - 1] = pid
+                self._tokens[s, 0] = req.out[-1]
+                self._steps[s] = req.length
+            batch = {"tokens": self._tokens, "table": self._table,
+                     "steps": self._steps}
+            self._note_trace("decode", ("decode", self.paged_kernel))
             with self._mesh_ctx():
                 if self.mesh is not None:
                     batch = _place_batch(batch, self.mesh)
                 logits, self.pool = self._decode(
                     self.params, self.pool, jnp.asarray(batch["tokens"]),
                     jnp.asarray(batch["table"]),
-                    jnp.asarray(batch["steps"]))
+                    jnp.asarray(batch["steps"]),
+                    kernel=self.paged_kernel)
                 toks = np.asarray(
                     jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
             done = []
@@ -345,6 +523,8 @@ class ServeEngine:
         return {**self.counters, "queued": len(self.queue),
                 "active": len(self.active),
                 "finished": len(self.finished),
+                "prefill_traces": len(self._trace_keys["prefill"]),
+                "decode_traces": len(self._trace_keys["decode"]),
                 "pages": self.alloc.stats(), "trie": self.trie.stats()}
 
     def report(self) -> dict:

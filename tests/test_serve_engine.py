@@ -24,7 +24,8 @@ from repro.configs import get_reduced
 from repro.core.backend import get_backend, list_backends
 from repro.launch.specs import serve_config
 from repro.models.model import Model
-from repro.serve import NULL_PAGE, PageAllocator, PrefixTrie, ServeEngine
+from repro.serve import (NULL_PAGE, PageAllocator, PrefixTrie, ServeEngine,
+                         bucket)
 from repro.train.serve_step import greedy_generate
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -226,11 +227,14 @@ def test_staggered_equals_batch_submit(fp_cell):
 
 # -- bit-identity across backends (the acceptance property) ------------------
 
+@pytest.mark.parametrize("kernel", [False, True],
+                         ids=["gather", "paged-kernel"])
 @pytest.mark.parametrize("backend", DEVICE_BACKENDS)
-def test_tokens_bit_identical_per_backend(backend, cache):
+def test_tokens_bit_identical_per_backend(backend, kernel, cache):
     """Every device-resident backend: ServeEngine tokens == the request
     alone through greedy_generate, under the full serving config (W4A8 +
-    KV8 + quantized attention), with prefix sharing active."""
+    KV8 + quantized attention), with prefix sharing active — on both the
+    gather-decode oracle and the Pallas live-page kernel path."""
     cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
                        backend=backend)
     model = Model(cfg)
@@ -242,7 +246,7 @@ def test_tokens_bit_identical_per_backend(backend, cache):
     max_len, gen = 12, 4
     prompts = _prompts(cfg, plen=6, n=3, seed=5)
     eng = ServeEngine(model, params, n_slots=2, max_len=max_len,
-                      page_size=4)
+                      page_size=4, paged_kernel=kernel)
     for p in prompts:
         eng.submit(p, gen)
     done = eng.run()
@@ -341,6 +345,136 @@ def test_requires_paged_support(fp_cell):
     cfg = get_reduced("recurrentgemma_9b")     # non-attn blocks
     with pytest.raises(NotImplementedError, match="paged"):
         ServeEngine(Model(cfg), params, max_len=8, page_size=4)
+
+
+# -- the fast path: bucketed batched prefill + Pallas live-page decode -------
+
+def test_bucket_unit():
+    assert [bucket(n, 64) for n in (1, 2, 3, 4, 5, 8, 9, 33)] == \
+        [1, 2, 4, 4, 8, 8, 16, 64]
+    assert bucket(100, 64) == 64          # clamped to the cap
+    with pytest.raises(ValueError):
+        bucket(0, 64)
+
+
+def _fresh_prompts(cfg, lens, seed=21):
+    """Distinct random prompts (no accidental prefix sharing)."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def test_bucket_boundary_identity(fp_cell):
+    """Prompt lengths at bucket edges, edge+-1 and exact page_size
+    multiples stay bit-identical to the per-request oracle through the
+    bucketed batched prefill, and the jit specializations are bounded by
+    the bucket set, not the length set."""
+    model, params = fp_cell
+    max_len, gen, ps = 32, 3, 4
+    # buckets 4 / 8 / 16 / 32: each edge, edge+-1, and the page_size
+    # multiples 4, 8, 12, 16 (12 is a multiple that is NOT a power of two)
+    lens = [3, 4, 5, 7, 8, 9, 12, 15, 16, 17]
+    prompts = _fresh_prompts(model.cfg, lens)
+    eng = ServeEngine(model, params, n_slots=len(lens), max_len=max_len,
+                      page_size=ps)
+    for p in prompts:
+        eng.submit(p, gen)
+    done = eng.run()
+    assert len(done) == len(lens)
+    for r in done:
+        ref = _reference(model, params, list(r.prompt), max_len, gen)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref,
+                                      err_msg=f"plen={len(r.prompt)}")
+    # one admission wave: the 10 lengths collapse into 4 suffix buckets
+    # (4, 8, 16, 32), one batched call and one trace each
+    c = eng.counters
+    assert c["prefill_batched_calls"] == 4
+    assert c["prefill_batched_rows"] == len(lens)
+    assert eng.stats()["prefill_traces"] == 4
+    assert c["bucket_hits"] == 0          # every key was new
+    # a second wave re-using a seen (batch, bucket) key is a bucket hit
+    # and must not add a specialization
+    for p in _fresh_prompts(model.cfg, [3, 4], seed=22):
+        eng.submit(p, gen)
+    done2 = eng.run()
+    for r in done2:
+        ref = _reference(model, params, list(r.prompt), max_len, gen)
+        np.testing.assert_array_equal(np.asarray(r.tokens), ref)
+    assert eng.counters["bucket_hits"] >= 1
+    assert eng.stats()["prefill_traces"] == 4
+
+
+def test_bucketed_vs_per_request_prefill_identical(fp_cell):
+    """bucket_prefill on/off is invisible in the tokens (same engine,
+    same prompts, prefix sharing active)."""
+    model, params = fp_cell
+    prompts = _prompts(model.cfg, plen=7, n=4, seed=19)
+    toks = {}
+    for on in (True, False):
+        eng = ServeEngine(model, params, n_slots=4, max_len=16,
+                          page_size=4, bucket_prefill=on)
+        for p in prompts:
+            eng.submit(p, 4)
+        toks[on] = {r.rid: r.tokens for r in eng.run()}
+        calls = eng.counters["prefill_batched_calls"]
+        assert (calls > 0) if on else (calls == 0)
+    assert toks[True] == toks[False]
+
+
+@pytest.mark.parametrize("page_size", [2, 4, 8])
+def test_paged_kernel_vs_gather_parity(fp_cell, page_size):
+    """decode_step_paged(kernel=True) == the gather oracle, bit for bit
+    (logits and written pool bytes), over slots with ragged live-page
+    counts and random pool contents."""
+    model, params = fp_cell
+    n_slots, max_len = 4, 32
+    pps = max_len // page_size
+    pool = model.init_page_pool(n_slots * pps + 1, page_size)
+    leaves, treedef = jax.tree_util.tree_flatten(pool)
+    key = jax.random.PRNGKey(3)
+    pool = jax.tree_util.tree_unflatten(treedef, [
+        jax.random.normal(jax.random.fold_in(key, i), leaf.shape,
+                          jnp.float32).astype(leaf.dtype)
+        for i, leaf in enumerate(leaves)])
+    # ragged: 1, 1, 2 and 3 live pages across the four slots
+    steps = [0, 1, page_size, 3 * page_size - 1]
+    table = np.zeros((n_slots, pps), np.int32)
+    nxt = 1
+    for s in range(n_slots):
+        for p in range(steps[s] // page_size + 1):
+            table[s, p], nxt = nxt, nxt + 1
+    tok = jnp.asarray([[5], [11], [23], [42]], jnp.int32)
+    fn = jax.jit(model.decode_step_paged, static_argnames=("kernel",))
+    args = (params, pool, tok, jnp.asarray(table),
+            jnp.asarray(steps, jnp.int32))
+    lg, pool_g = fn(*args, kernel=False)
+    lk, pool_k = fn(*args, kernel=True)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lk))
+    for a, b in zip(jax.tree_util.tree_leaves(pool_g),
+                    jax.tree_util.tree_leaves(pool_k)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_kernel_engine_ragged_identity(fp_cell):
+    """Kernel-path engine over slots with ragged live-page counts: equal
+    to the per-request oracle AND to the gather-path engine, token for
+    token, with decode crossing page boundaries mid-generation."""
+    model, params = fp_cell
+    max_len, gen = 32, 6
+    prompts = _fresh_prompts(model.cfg, [3, 6, 11, 20], seed=23)
+    toks = {}
+    for kern in (False, True):
+        eng = ServeEngine(model, params, n_slots=4, max_len=max_len,
+                          page_size=4, paged_kernel=kern)
+        for p in prompts:
+            eng.submit(p, gen)
+        toks[kern] = {r.rid: r.tokens for r in eng.run()}
+        assert eng.stats()["decode_traces"] == 1   # one shape either way
+        for r in eng.finished:
+            ref = _reference(model, params, list(r.prompt), max_len, gen)
+            np.testing.assert_array_equal(
+                np.asarray(r.tokens), ref,
+                err_msg=f"kernel={kern} plen={len(r.prompt)}")
+    assert toks[False] == toks[True]
 
 
 # -- bench contract ----------------------------------------------------------
