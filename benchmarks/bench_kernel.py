@@ -296,6 +296,141 @@ def serve_fastpath_bench(smoke: bool = False,
             "prefill_bucketed": bucketed}
 
 
+def serve_hotswap_bench(smoke: bool = False,
+                        backend: str = "engine_jit") -> dict:
+    """Live-weight swap cost as a timeline, not a point (PR 9).
+
+    Serves the same two-phase workload twice on the reduced smollm
+    config: **hot** — the fleet path, where generation 1 is built
+    off-path (``repro.fleet.build_generation``) and atomically swapped
+    between decode steps — and **drain_restart** — the pre-fleet
+    baseline, where the engine drains, the process pays the cold plan
+    build inline, and a new engine starts. Both runs record per-step
+    decode wall times; the headline is the worst inter-step stall around
+    the weight change (``stall_hot_us`` vs ``stall_restart_us`` — the
+    hot one should be a normal step, the restart one IS the plan build).
+    Also times the bundle pipeline on the same weights:
+    ``bundle_write_us`` (planner, amortised once per fleet) vs
+    ``bundle_load_us`` (per serve cell, fresh cache, zero plan builds)
+    vs ``plan_build_us`` (what the cell pays without bundles). Lands
+    under ``serve_engine.hotswap`` in BENCH_engine.json."""
+    import shutil
+    import tempfile
+
+    from repro.configs import get_reduced
+    import repro.core.plancache as PC
+    from repro.core.plancache import PlanCache
+    from repro.fleet import build_generation, load_bundles, write_bundles
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+    from repro.serve import ServeEngine
+
+    cfg = serve_config(get_reduced("smollm_135m").replace(
+        n_layers=2 if smoke else 4), backend=backend)
+    model = Model(cfg)
+    raw = {g: model.init(jax.random.PRNGKey(g)) for g in (0, 1)}
+    rng = np.random.default_rng(5)
+    plen, gen_toks, n_req = (8, 6, 4) if smoke else (16, 16, 8)
+    prompts = [rng.integers(0, cfg.vocab, size=plen).tolist()
+               for _ in range(n_req)]
+    first = n_req // 2
+    page_size = 4
+    max_len = -(-(plen + gen_toks) // page_size) * page_size
+
+    def _run(eng, reqs, series, swap_to=None, swap_at=2):
+        """Drive reqs to completion, appending per-step wall times;
+        optionally stage a pre-built generation after ``swap_at`` steps."""
+        submitted = 0
+        swapped = None
+        while submitted < len(reqs) or eng.queue or eng.active:
+            if submitted < len(reqs):
+                eng.submit(reqs[submitted], gen_toks)
+                submitted += 1
+            if swap_to is not None and swapped is None \
+                    and len(series) >= swap_at:
+                swapped = eng.swap_params(swap_to.params, tag="bench")
+            t0 = time.perf_counter()
+            eng.step()
+            series.append({"step_us": (time.perf_counter() - t0) * 1e6,
+                           "generation": eng.generation})
+        return swapped
+
+    # -- hot: generation 1 built off-path, swapped between steps ----------
+    cache = PlanCache(capacity=256)
+    prev = PC.set_default_cache(cache)
+    try:
+        gen0 = build_generation(model, raw[0], gen=0)
+        t0 = time.perf_counter()
+        gen1 = build_generation(model, raw[1], ref=gen0.params, gen=1)
+        plan_build_us = (time.perf_counter() - t0) * 1e6
+
+        hot: list[dict] = []
+        eng = ServeEngine(model, gen0.params, n_slots=2, max_len=max_len,
+                          page_size=page_size)
+        _run(eng, prompts[:first], hot)       # warm the jits on gen 0
+        warm = len(hot)
+        _run(eng, prompts[first:], hot, swap_to=gen1)
+        swap_step = next(i for i, s in enumerate(hot)
+                         if s["generation"] > 0)
+        stall_hot_us = max(s["step_us"] for s in hot[warm:])
+        hot_traces = eng.stats()["decode_jit_traces"]
+
+        # -- drain-and-restart baseline: cold build inline ----------------
+        restart: list[dict] = []
+        eng = ServeEngine(model, gen0.params, n_slots=2, max_len=max_len,
+                          page_size=page_size)
+        _run(eng, prompts[:first], restart)   # drains completely
+        t0 = time.perf_counter()
+        PC.set_default_cache(PlanCache(capacity=256))   # cold process
+        gen1_cold = build_generation(model, raw[1], gen=1)
+        eng = ServeEngine(model, gen1_cold.params, n_slots=2,
+                          max_len=max_len, page_size=page_size)
+        stall_restart_us = (time.perf_counter() - t0) * 1e6
+        restart.append({"step_us": stall_restart_us, "generation": 1,
+                        "restart_gap": True})
+        _run(eng, prompts[first:], restart)
+    finally:
+        PC.set_default_cache(prev)
+
+    # -- bundles: plan once (planner), load on a fresh cell ---------------
+    bdir = tempfile.mkdtemp(prefix="hotswap_bundles_")
+    try:
+        t0 = time.perf_counter()
+        write_bundles(raw[1], cfg.quant, bdir)
+        bundle_write_us = (time.perf_counter() - t0) * 1e6
+        cell_cache = PlanCache(capacity=256)
+        prev = PC.set_default_cache(cell_cache)
+        try:
+            t0 = time.perf_counter()
+            load_bundles(raw[1], cfg.quant, bdir)
+            bundle_load_us = (time.perf_counter() - t0) * 1e6
+        finally:
+            PC.set_default_cache(prev)
+        if cell_cache.stats()["misses"]:
+            raise RuntimeError("bundle load built plans on the serve "
+                               f"cell: {cell_cache.stats()}")
+    finally:
+        shutil.rmtree(bdir, ignore_errors=True)
+
+    emit("serve_engine.hotswap", stall_hot_us,
+         f"{backend}: swap stall hot={stall_hot_us:.0f}us vs "
+         f"drain+restart={stall_restart_us:.0f}us "
+         f"(x{stall_restart_us / max(stall_hot_us, 1):.1f}) | "
+         f"decode traces through swap={hot_traces} | plan_build="
+         f"{plan_build_us:.0f}us bundle_write={bundle_write_us:.0f}us "
+         f"bundle_load={bundle_load_us:.0f}us")
+    return {"backend": backend, "n_requests": n_req, "gen": gen_toks,
+            "swap_step": swap_step,
+            "stall_hot_us": stall_hot_us,
+            "stall_restart_us": stall_restart_us,
+            "decode_jit_traces_hot": hot_traces,
+            "plan_build_us": plan_build_us,
+            "bundle_write_us": bundle_write_us,
+            "bundle_load_us": bundle_load_us,
+            "timeline_hot": hot,
+            "timeline_restart": restart}
+
+
 def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
                 backends=None):
     """Cached vs uncached serving + a per-backend decode series.
@@ -464,6 +599,10 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
     # specialization counts (serve_engine.paged_kernel.* /
     # serve_engine.prefill_bucketed.*)
     result["serve_engine"].update(serve_fastpath_bench(smoke=smoke))
+
+    # PR-9 live-weight serving: hot-swap stall timeline vs drain-and-
+    # restart + the bundle pipeline costs (serve_engine.hotswap.*)
+    result["serve_engine"]["hotswap"] = serve_hotswap_bench(smoke=smoke)
 
     # legacy flat aliases for the PR-2/PR-3 trajectory keys
     eng_e = result["backends"].get("engine", {})

@@ -34,6 +34,12 @@ PROGRAM_RULES = {
                "kv-donation", "sharding-integrity"),
     "paged-decode": ("no-host-callback", "static-shapes", "dtype-purity",
                      "kv-donation"),
+    # the post-hot-swap decode (PR 9): the same paged step on a SECOND
+    # weight generation built off-thread by repro.fleet.build_generation
+    # and pad-aligned against the first — swap must not cost the serving
+    # invariants (kv-donation in particular stays finding-free)
+    "paged-decode-swapped": ("no-host-callback", "static-shapes",
+                             "dtype-purity", "kv-donation"),
     # the PR-8 fast paths: the Pallas live-page decode kernel and the
     # bucketed batched prefill are held to the same serving invariants as
     # the oracle paths they shadow, from day one
@@ -134,6 +140,23 @@ def build_programs(backend_name: str, *, mesh=None, arch: str = "smollm-135m",
                     page_idx, steps),
                 donate_expect={"kv-page-pool":
                                (n_params, n_params + _n_leaves(pool))}))
+
+            # -- paged decode after a hot swap (second weight generation) --
+            from repro.fleet import build_generation
+            gen = build_generation(
+                model, model.init(jax.random.PRNGKey(2)), ref=params,
+                gen=1, mesh=mesh)
+            n_swapped = _n_leaves(gen.params)
+            progs.append(LintProgram(
+                name="paged-decode-swapped", backend=backend_name,
+                rules=PROGRAM_RULES["paged-decode-swapped"],
+                jaxpr=jax.make_jaxpr(model.decode_step_paged)(
+                    gen.params, pool, tok, page_idx, steps),
+                lowered_text=_lower_donated(
+                    model.decode_step_paged, (1,), gen.params, pool, tok,
+                    page_idx, steps),
+                donate_expect={"kv-page-pool":
+                               (n_swapped, n_swapped + _n_leaves(pool))}))
 
             # -- paged decode through the Pallas live-page kernel ----------
             kernel_fn = lambda p, pl, t, pi, st: \

@@ -48,9 +48,10 @@ from repro.core.scoreboard import (MAX_DISTANCE, ScoreboardInfo,
                                    dynamic_scoreboard)
 
 __all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep",
-           "DevicePlan", "PlanBundle", "DEVICE_DATA_FIELDS",
-           "compile_plan", "compile_plans", "forest_body",
-           "run_device", "run_device_jit"]
+           "DevicePlan", "PlanBundle", "BundleMismatchError",
+           "DEVICE_DATA_FIELDS", "compile_plan", "compile_plans",
+           "pad_device_plan", "forest_body", "run_device",
+           "run_device_jit"]
 
 
 # DevicePlan's array leaves, in one place: the pytree registration, the
@@ -58,6 +59,18 @@ __all__ = ["BatchedTransitiveEngine", "ExecutionPlan", "LevelStep",
 # bundle all agree on this list by construction.
 DEVICE_DATA_FIELDS = ("level_src", "level_xsrc", "direct_idx",
                       "direct_x_idx", "direct_bits", "gather_idx", "signs")
+
+
+class BundleMismatchError(ValueError):
+    """A persisted plan bundle does not match what it is being attached to.
+
+    Raised by :meth:`ExecutionPlan.load_bundle` (weight fingerprint or
+    engine-config mismatch against the weights/config the caller is about
+    to serve with) and by the fleet manifest loader
+    (repro.fleet.bundles) for manifest-level refusals. A plan is a pure
+    function of the weight bit-patterns, so a stale bundle silently
+    computes the *old* weights' GEMM — this error makes that loud.
+    ``force=True`` on the loading API is the explicit escape hatch."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +103,8 @@ class ExecutionPlan:
         return self.k // self.t
 
     # -- persistence (npz) ------------------------------------------------
-    def save(self, path, *, device=None, backend: str | None = None) -> None:
+    def save(self, path, *, device=None, backend: str | None = None,
+             fingerprint: str | None = None) -> None:
         """Serialize the full plan (schedule + scoreboard) to an ``.npz``.
 
         Everything is plain numpy, so a plan precompiled in one process can
@@ -102,13 +116,20 @@ class ExecutionPlan:
         along leading axes) rides in the same file, tagged with the
         ``backend`` registry name that lowered it — so a cached lowering
         also round-trips across processes (:meth:`load_bundle`) instead of
-        being re-done per process."""
+        being re-done per process.
+
+        ``fingerprint=`` stores the content hash of the weights this plan
+        was built from (``repro.core.plancache.weight_fingerprint`` over
+        the canonical int8 bytes) so :meth:`load_bundle` can refuse to
+        attach the bundle to different weights."""
         extra = {}
         if backend is not None and device is None:
             raise ValueError(
                 "backend= tags the persisted device lowering; pass "
                 "device= as well (a backend tag alone would be dropped "
                 "silently on load)")
+        if fingerprint is not None:
+            extra["weight_fp"] = np.array(fingerprint)
         if device is not None:
             extra["device_meta"] = np.array(
                 [device.t, device.bits, device.n, device.k, device.groups],
@@ -166,21 +187,66 @@ class ExecutionPlan:
                              signs=z["signs"], groups=groups)
 
     @staticmethod
-    def load_bundle(path) -> "PlanBundle":
+    def load_bundle(path, *, qw=None, cfg=None,
+                    force: bool = False) -> "PlanBundle":
         """Load a plan plus — when the file carries one — its persisted
         device lowering and the backend registry name that produced it.
-        Files written without ``device=`` load with ``device=None``."""
+        Files written without ``device=`` load with ``device=None``.
+
+        ``qw=`` (the weights the caller is about to attach the plan to)
+        and ``cfg=`` (anything with ``w_bits`` / ``t`` / ``groups``, e.g.
+        an ``EngineConfig``) opt into validation: the stored weight
+        fingerprint must match ``qw``'s content hash and the plan
+        signature must match ``cfg``, else :class:`BundleMismatchError`.
+        A bundle written without ``fingerprint=`` cannot prove anything
+        about its weights, so asking it to (``qw=`` on a fingerprint-less
+        file) also refuses. ``force=True`` skips the fingerprint/config
+        refusals (shape mismatches still raise — they could never run)."""
         with np.load(path) as z:
             plan = ExecutionPlan._from_npz(z)
+            stored_fp = (str(z["weight_fp"]) if "weight_fp" in z.files
+                         else None)
             if "device_meta" not in z.files:
-                return PlanBundle(plan=plan, device=None, backend=None)
-            t, bits, n, k, groups = (int(v) for v in z["device_meta"])
-            device = DevicePlan(   # jnp comes from the module tail import
-                t=t, bits=bits, n=n, k=k, groups=groups,
-                **{f: jnp.asarray(z[f"device_{f}"])
-                   for f in DEVICE_DATA_FIELDS})
-            backend = str(z["device_backend"]) or None
-        return PlanBundle(plan=plan, device=device, backend=backend)
+                device, backend = None, None
+            else:
+                t, bits, n, k, groups = (int(v) for v in z["device_meta"])
+                device = DevicePlan(  # jnp from the module tail import
+                    t=t, bits=bits, n=n, k=k, groups=groups,
+                    **{f: jnp.asarray(z[f"device_{f}"])
+                       for f in DEVICE_DATA_FIELDS})
+                backend = str(z["device_backend"]) or None
+        if cfg is not None:
+            got = (plan.bits, plan.t, plan.groups)
+            want = (cfg.w_bits, cfg.t, cfg.groups)
+            if got != want and not force:
+                raise BundleMismatchError(
+                    f"{path}: plan (bits, t, groups)={got} does not match "
+                    f"the serving config {want}; pass force=True to "
+                    f"attach anyway")
+        if qw is not None:
+            # shape first: a wrong-shaped plan could never run at all
+            from repro.core.plancache import _canonical, weight_fingerprint
+            qw_c = _canonical(np.asarray(qw))
+            if qw_c.shape != (plan.n, plan.k):
+                raise BundleMismatchError(
+                    f"{path}: plan is for weights (n, k)=({plan.n}, "
+                    f"{plan.k}), got {qw_c.shape}")
+            if not force:
+                if stored_fp is None:
+                    raise BundleMismatchError(
+                        f"{path}: bundle carries no weight fingerprint "
+                        f"(written without fingerprint=), so it cannot be "
+                        f"validated against these weights; pass "
+                        f"force=True to attach anyway")
+                fp = weight_fingerprint(qw_c)
+                if fp != stored_fp:
+                    raise BundleMismatchError(
+                        f"{path}: bundle was planned from weights "
+                        f"{stored_fp}, but these weights hash to {fp} — "
+                        f"a stale plan would compute the old weights' "
+                        f"GEMM; pass force=True to attach anyway")
+        return PlanBundle(plan=plan, device=device, backend=backend,
+                          fingerprint=stored_fp)
 
 
 class BatchedTransitiveEngine:
@@ -369,10 +435,12 @@ jax.tree_util.register_dataclass(
 class PlanBundle:
     """What :meth:`ExecutionPlan.load_bundle` returns: the host plan, and —
     when the file persisted one — its device lowering plus the backend
-    registry name that produced it."""
+    registry name that produced it, and the fingerprint of the weights
+    the plan was built from (None for pre-fingerprint files)."""
     plan: ExecutionPlan
     device: DevicePlan | None
     backend: str | None
+    fingerprint: str | None = None
 
 
 def compile_plan(plan: ExecutionPlan, *,
@@ -441,6 +509,41 @@ def compile_plans(plans) -> DevicePlan:
     d = max(p.direct_tile.size for p in plans)
     dps = [compile_plan(p, direct_pad=d) for p in plans]
     return jax.tree.map(lambda *leaves: jnp.stack(leaves), *dps)
+
+
+def pad_device_plan(dplan: DevicePlan, direct_pad: int) -> DevicePlan:
+    """Widen a compiled plan's direct-dispatch axis to ``direct_pad``.
+
+    The pad lanes are the same bit-exact no-ops :func:`compile_plan`
+    emits — scatter target ``J * 2^T`` (one past the table, discarded by
+    ``mode="drop"``), activation row 0, all-zero bit mask — so the padded
+    plan computes identical results. The point is aval stability: ``D``
+    is a function of the *weight content*, so two generations of weights
+    lower to different leaf shapes unless the later one is padded to at
+    least the earlier one's width; the fleet layer
+    (repro.fleet.replan.align_device_plans) uses this to keep the
+    serve engine's memoised decode jit from retracing on a hot swap.
+    Works on stacked plans too (leading axes are preserved)."""
+    d = int(dplan.direct_idx.shape[-1])
+    pad = int(direct_pad)
+    if pad < d:
+        raise ValueError(f"direct_pad={pad} < current width {d}")
+    if pad == d:
+        return dplan
+    lead = tuple(dplan.direct_idx.shape[:-1])
+    invalid = dplan.n_tiles * (1 << dplan.t)
+    pad_idx = jnp.full(lead + (pad - d,), invalid,
+                       dplan.direct_idx.dtype)
+    pad_2d = jnp.zeros(lead + (pad - d, dplan.t),
+                       dplan.direct_x_idx.dtype)
+    return dataclasses.replace(
+        dplan,
+        direct_idx=jnp.concatenate([dplan.direct_idx, pad_idx], axis=-1),
+        direct_x_idx=jnp.concatenate(
+            [dplan.direct_x_idx, pad_2d], axis=-2),
+        direct_bits=jnp.concatenate(
+            [dplan.direct_bits,
+             pad_2d.astype(dplan.direct_bits.dtype)], axis=-2))
 
 
 def forest_body(xt, level_src, level_xsrc, direct_idx, direct_x_idx,

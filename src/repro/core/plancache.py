@@ -86,10 +86,19 @@ class _Entry:
 class _Pending:
     """An in-flight plan build: the first thread to miss a key builds the
     plan OUTSIDE the cache lock; concurrent lookups of the same key wait
-    on ``event`` instead of re-building (or blocking every other key)."""
+    on ``event`` instead of re-building (or blocking every other key).
+
+    ``dead`` is the invalidation tombstone: an ``invalidate`` /
+    ``invalidate_version`` / ``clear`` that lands while the build is in
+    flight cannot remove an entry that is not published yet, so it marks
+    the pending slot instead and the builder discards the finished plan
+    at publish time — the callers that already coalesced on this build
+    still receive the plan (they looked up before the invalidation), but
+    the cache never retains it."""
     event: threading.Event
     entry: "_Entry | None" = None
     error: BaseException | None = None
+    dead: bool = False
 
 
 def weight_fingerprint(qw: np.ndarray) -> str:
@@ -253,11 +262,18 @@ class PlanCache:
             pending.event.set()
             raise
         with self._lock:
-            self._plans[key] = entry
+            if pending.dead:
+                # an invalidation raced the build: discard instead of
+                # publishing (the dead entry must not be resurrected).
+                # The builder and any coalesced waiters still get the
+                # plan — they looked up before the invalidation landed.
+                self.invalidations += 1
+            else:
+                self._plans[key] = entry
+                while len(self._plans) > self.capacity:
+                    self._plans.popitem(last=False)
+                    self.evictions += 1
             self._pending.pop(key, None)
-            while len(self._plans) > self.capacity:
-                self._plans.popitem(last=False)
-                self.evictions += 1
         pending.entry = entry
         pending.event.set()
         return entry
@@ -341,7 +357,12 @@ class PlanCache:
         weights: hashing the new bytes matches nothing. When an in-place
         update has destroyed the old bytes, version-keyed callers use
         :meth:`invalidate_version` (or simply bump the tag) instead.
-        Returns the number of entries removed."""
+
+        In-flight builds of the same content key are tombstoned: a
+        build coalescing on a ``_Pending`` slot when the invalidation
+        lands finishes but is discarded at publish time rather than
+        resurrecting the dead entry (counted as an invalidation then).
+        Returns the number of published entries removed now."""
         fp = weight_fingerprint(_canonical(qw))
         with self._lock:
             stale = [k for k, e in self._plans.items()
@@ -349,6 +370,9 @@ class PlanCache:
             for k in stale:
                 del self._plans[k]
             self.invalidations += len(stale)
+            for k, p in self._pending.items():
+                if k[0] == "fp" and k[1] == fp:
+                    p.dead = True
             return len(stale)
 
     def invalidate_version(self, version: Hashable) -> int:
@@ -357,20 +381,28 @@ class PlanCache:
         The tag-side counterpart of :meth:`invalidate` for weight updates
         where the old bytes are gone (in-place param donation): without
         it, a reused tag would serve the old weights' plan silently.
-        Returns the number of entries removed."""
+        In-flight builds under this tag are tombstoned like
+        :meth:`invalidate` tombstones content keys.
+        Returns the number of published entries removed now."""
         with self._lock:
             stale = [k for k in self._plans
                      if k[0] == "v" and k[1] == version]
             for k in stale:
                 del self._plans[k]
             self.invalidations += len(stale)
+            for k, p in self._pending.items():
+                if k[0] == "v" and k[1] == version:
+                    p.dead = True
             return len(stale)
 
     def clear(self) -> None:
-        """Drop all entries (counts them as invalidations)."""
+        """Drop all entries (counts them as invalidations); in-flight
+        builds are tombstoned so they cannot repopulate the cache."""
         with self._lock:
             self.invalidations += len(self._plans)
             self._plans.clear()
+            for p in self._pending.values():
+                p.dead = True
 
     def reserve(self, n_plans: int) -> None:
         """Grow capacity to hold at least ``n_plans`` entries (never shrinks).

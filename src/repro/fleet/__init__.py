@@ -1,0 +1,28 @@
+"""Live-weight serving fleet layer: async re-plan, hot-swap, bundles.
+
+Transitive Array's execution plans are functions of the weight
+*bit-patterns*, so weight updates invalidate every plan. This package
+keeps serve cells alive through weight churn:
+
+  * :mod:`repro.fleet.replan` — :class:`ReplanWorker` builds new plan
+    generations on a background thread (:func:`build_generation`),
+    pad-aligned so the serve engine's decode jit is not retraced;
+    :class:`WeightWatcher` feeds it from a checkpoint directory.
+  * :mod:`repro.fleet.bundles` — plan once on a planner role, write a
+    fingerprinted manifest, attach on N server cells with zero plan
+    builds (:func:`write_bundles` / :func:`load_bundles`).
+
+The hot-swap protocol itself lives on ``ServeEngine.swap_params``
+(serve/engine.py); docs/FLEET.md documents the whole lifecycle.
+"""
+from repro.fleet.bundles import (MANIFEST, load_bundles, read_manifest,
+                                 write_bundles)
+from repro.fleet.replan import (Generation, ReplanSuperseded, ReplanTicket,
+                                ReplanWorker, WeightWatcher,
+                                align_device_plans, build_generation,
+                                fingerprint_params)
+
+__all__ = ["Generation", "MANIFEST", "ReplanSuperseded", "ReplanTicket",
+           "ReplanWorker", "WeightWatcher", "align_device_plans",
+           "build_generation", "fingerprint_params", "load_bundles",
+           "read_manifest", "write_bundles"]

@@ -1,0 +1,264 @@
+"""Plan-bundle distribution: plan once, serve everywhere.
+
+The offline half of a Transitive Array deployment is expensive (the
+scoreboard/DAG build per weight) and — today — redundantly paid on every
+serve cell. This module turns the backend-tagged
+``ExecutionPlan.save(device=, backend=)`` / ``load_bundle`` persistence
+into a *fleet artifact*:
+
+  * a **planner** role walks the params once, builds + compiles every
+    PTQ layer's plans, and writes one ``.npz`` bundle per weight slice
+    plus a ``manifest.json`` carrying the global weight fingerprint, the
+    ``EngineConfig`` knobs, the backend registry name and per-file
+    SHA-256 hashes (:func:`write_bundles`);
+  * N **server** cells :func:`load_bundles` + attach instead of
+    planning: the manifest fingerprint is checked against the cell's own
+    weights (refusal on mismatch — a stale bundle would silently serve
+    the *old* weights' GEMM), every file hash is verified, and each
+    slice re-validates its own stored fingerprint through
+    ``ExecutionPlan.load_bundle(qw=...)``. The result is params with
+    ``"dplan"``s embedded, exactly like
+    ``Model.attach_device_plans`` — but with **zero plan builds** on the
+    serve cell.
+
+``force=True`` is the explicit escape hatch past the fingerprint/config
+refusals (file-hash corruption still refuses: that is damage, not
+drift). File layout: flat directory, ``manifest.json`` written last.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.backend import (EngineConfig, get_backend,
+                                shard_device_plan)
+from repro.core.engine import (BundleMismatchError, DevicePlan,
+                               ExecutionPlan, compile_plan)
+from repro.core.plancache import (_canonical, _cfg_backend, _is_ptq_layer,
+                                  _layer_groups, _plan_knobs,
+                                  default_cache, weight_fingerprint)
+from repro.fleet.replan import fingerprint_params
+
+__all__ = ["MANIFEST", "load_bundles", "read_manifest", "write_bundles"]
+
+MANIFEST = "manifest.json"
+_FORMAT = 1
+
+
+def _sha256(path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _iter_layer_paths(tree: Any, path: tuple = ()):
+    """Yield ``("a/b/c", layer_dict)`` for every PTQ layer, in the same
+    deterministic walk order as the plancache attach walk — write and
+    load key layers by this path, so both sides must agree."""
+    if isinstance(tree, dict):
+        if _is_ptq_layer(tree):
+            yield "/".join(map(str, path)), tree
+            return
+        for k, v in tree.items():
+            yield from _iter_layer_paths(v, path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_layer_paths(v, path + (i,))
+
+
+def write_bundles(params: Any, cfg: Any, out_dir, *, backend=None,
+                  cache=None) -> dict:
+    """Planner role: plan + compile every PTQ layer, persist to
+    ``out_dir``, return the manifest (also written as manifest.json).
+
+    ``cfg`` names the serving quantization (a ``QuantConfig`` or
+    ``EngineConfig``); ``backend=`` overrides which registry backend's
+    ``compile`` hook lowers the device plans (default: the one ``cfg``
+    names, else ``engine_jit``). Stacked (scan-over-blocks) layers write
+    one file per slice, all padded to the layer's shared direct bound so
+    the loader can restack them without re-padding.
+    """
+    cache = default_cache() if cache is None else cache
+    b = _cfg_backend(cfg, backend)
+    if b is None:
+        b = get_backend("engine_jit")
+    if not (b.needs_plan and b.device_resident):
+        raise ValueError(
+            f"backend '{b.name}' does not execute from device plans; "
+            f"plan bundles distribute the planned device backends")
+    w_bits, t = _plan_knobs(cfg)
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.perf_counter()
+    layers: dict[str, dict] = {}
+    n_files = 0
+    for lpath, layer in _iter_layer_paths(params):
+        qw = np.asarray(layer["qw"])
+        sg = np.asarray(layer["sg"])
+        ecfg = EngineConfig(w_bits=w_bits, t=t,
+                            groups=_layer_groups(sg))
+        lead = qw.shape[:-2]
+        idxs = list(np.ndindex(*lead)) if lead else [()]
+        plans = [cache.get_or_build(qw[i] if i else qw, ecfg,
+                                    backend=b.name) for i in idxs]
+        # one shared direct bound per layer: the loader restacks the
+        # slices, and stacking needs identical leaf shapes
+        d = max(max(p.direct_tile.size for p in plans), 1)
+        entries = []
+        safe = lpath.replace("/", "__")
+        for i, plan in zip(idxs, plans):
+            qslice = qw[i] if i else qw
+            fp = weight_fingerprint(_canonical(qslice))
+            fname = (f"{safe}__{'_'.join(map(str, i))}.npz" if i
+                     else f"{safe}.npz")
+            fpath = os.path.join(out_dir, fname)
+            plan.save(fpath, device=compile_plan(plan, direct_pad=d),
+                      backend=b.name, fingerprint=fp)
+            entries.append({"file": fname, "index": list(i),
+                            "fingerprint": fp, "sha256": _sha256(fpath)})
+            n_files += 1
+        layers[lpath] = {"lead": list(lead), "groups": ecfg.groups,
+                         "direct_pad": d, "files": entries}
+    manifest = {"format": _FORMAT, "backend": b.name,
+                "engine_config": {"w_bits": w_bits, "t": t},
+                "weights_fingerprint": fingerprint_params(params),
+                "n_layers": len(layers), "n_files": n_files,
+                "layers": layers,
+                "plan_wall_s": time.perf_counter() - t0}
+    with open(os.path.join(out_dir, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def read_manifest(bundle_dir) -> dict:
+    path = os.path.join(bundle_dir, MANIFEST)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no {MANIFEST} in {bundle_dir} — not a plan-bundle "
+            f"directory (write one with the planner role)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_bundles(params: Any, cfg: Any, bundle_dir, *,
+                 force: bool = False, mesh=None, specs=None,
+                 cache=None) -> Any:
+    """Server role: attach persisted DevicePlans instead of planning.
+
+    Returns a copy of ``params`` with ``"dplan"`` embedded per PTQ
+    layer, like ``attach_device_plans`` — but every plan comes from
+    ``bundle_dir``, validated three ways before it is trusted:
+
+      1. manifest-level: global weight fingerprint vs these params,
+         backend + EngineConfig vs the serving ``cfg``, layer-path set
+         vs the params walk (all :class:`BundleMismatchError`, skipped
+         by ``force=True`` except missing layers);
+      2. file-level: SHA-256 of every bundle file (corruption always
+         refuses — ``force`` does not bypass damaged bytes);
+      3. slice-level: ``ExecutionPlan.load_bundle(qw=slice, cfg=...)``
+         re-checks the stored per-slice fingerprint (the satellite
+         validation this module rides on).
+
+    ``cache`` is untouched on the happy path — the point is that the
+    serve cell builds zero plans.
+    """
+    manifest = read_manifest(bundle_dir)
+    b = _cfg_backend(cfg, None)
+    if b is None:
+        b = get_backend("engine_jit")
+    w_bits, t = _plan_knobs(cfg)
+    mcfg = manifest.get("engine_config", {})
+    if not force:
+        if manifest.get("format") != _FORMAT:
+            raise BundleMismatchError(
+                f"{bundle_dir}: manifest format "
+                f"{manifest.get('format')} != {_FORMAT}")
+        if manifest.get("backend") != b.name:
+            raise BundleMismatchError(
+                f"{bundle_dir}: bundles were compiled for backend "
+                f"'{manifest.get('backend')}', this cell serves "
+                f"'{b.name}' (plan lowerings are backend-tagged); pass "
+                f"force=True to attach anyway")
+        if (mcfg.get("w_bits"), mcfg.get("t")) != (w_bits, t):
+            raise BundleMismatchError(
+                f"{bundle_dir}: bundle engine_config {mcfg} does not "
+                f"match serving (w_bits={w_bits}, t={t})")
+        fp = fingerprint_params(params)
+        want = manifest.get("weights_fingerprint")
+        if fp != want:
+            raise BundleMismatchError(
+                f"{bundle_dir}: bundles were planned from weights "
+                f"{want}, this cell holds {fp} — a stale bundle would "
+                f"serve the old weights' GEMM; re-plan (planner role) "
+                f"or pass force=True")
+    if mesh is not None and specs is None:
+        specs = b.plan_specs(mesh)
+    layers = dict(manifest["layers"])
+    ecfg_of = {lp: EngineConfig(w_bits=w_bits, t=t,
+                                groups=int(m["groups"]))
+               for lp, m in layers.items()}
+
+    import jax
+    import jax.numpy as jnp
+
+    def attach(lpath: str, layer: dict) -> dict:
+        meta = layers.pop(lpath, None)
+        if meta is None:
+            raise BundleMismatchError(
+                f"{bundle_dir}: no bundle for layer '{lpath}' — the "
+                f"manifest covers a different model")
+        qw = np.asarray(layer["qw"])
+        lead = qw.shape[:-2]
+        if list(lead) != list(meta["lead"]):
+            raise BundleMismatchError(
+                f"{bundle_dir}: layer '{lpath}' lead axes {lead} != "
+                f"manifest {meta['lead']}")
+        devices = []
+        for e in meta["files"]:
+            fpath = os.path.join(bundle_dir, e["file"])
+            if _sha256(fpath) != e["sha256"]:
+                raise BundleMismatchError(
+                    f"{fpath}: file hash mismatch — bundle corrupted "
+                    f"or tampered (force= does not bypass this)")
+            i = tuple(e["index"])
+            bundle = ExecutionPlan.load_bundle(
+                fpath, qw=(qw[i] if i else qw),
+                cfg=ecfg_of[lpath], force=force)
+            dev = bundle.device
+            if dev is None:  # plan-only file: lower locally, once
+                dev = b.compile(bundle.plan)
+            devices.append(dev)
+        if lead:
+            dplan = jax.tree.map(lambda *ls: jnp.stack(ls), *devices)
+            dplan = jax.tree.map(
+                lambda a: a.reshape(lead + a.shape[1:]), dplan)
+        else:
+            dplan = devices[0]
+        if mesh is not None and isinstance(dplan, DevicePlan):
+            dplan = shard_device_plan(dplan, mesh, specs)
+        return {**layer, "dplan": dplan}
+
+    def walk(tree: Any, path: tuple = ()):
+        if isinstance(tree, dict):
+            if _is_ptq_layer(tree):
+                return attach("/".join(map(str, path)), tree)
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, path + (i,)) for i, v in enumerate(tree)]
+        if isinstance(tree, tuple):
+            return tuple(walk(v, path + (i,))
+                         for i, v in enumerate(tree))
+        return tree
+
+    out = walk(params)
+    if layers and not force:
+        raise BundleMismatchError(
+            f"{bundle_dir}: manifest carries bundles for layers not in "
+            f"these params: {sorted(layers)}")
+    return out

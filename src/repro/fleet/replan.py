@@ -1,0 +1,396 @@
+"""Asynchronous re-planning for live-weight serving.
+
+Transitive Array's execution plans are derived from the *weight
+bit-patterns* (the transitive DAG over weight rows), so unlike
+plain-GEMM serving, every weight update invalidates the whole plan
+forest. This module keeps that cost off the serving hot path:
+
+  * :func:`build_generation` — the offline half for ONE set of weights:
+    plan (through the :class:`~repro.core.plancache.PlanCache`, reusing
+    its ``_Pending`` single-build coalescing), compile + attach
+    ``DevicePlan``s, align their pads against the currently-serving
+    generation (:func:`align_device_plans`) and mesh-place them. Pure
+    function of its inputs; safe to run on any thread.
+  * :class:`ReplanWorker` — a background thread that runs
+    ``build_generation`` on submitted weights, newest-submission-wins,
+    and hands finished generations to a callback (typically
+    ``ServeEngine.swap_params``). A failed build never reaches the
+    engine: the previous generation keeps serving — that IS the
+    rollback.
+  * :class:`WeightWatcher` — polls a checkpoint directory
+    (``repro.distributed.checkpoint`` format) and feeds new weights to
+    the worker; the serve loop calls ``poll()`` between host steps.
+
+The pad-alignment detail is what makes hot swaps retrace-free: a
+``DevicePlan``'s direct-dispatch width ``D`` is a function of weight
+*content*, so two generations of the same layer lower to different leaf
+shapes unless the later one is padded (bit-exactly — pad lanes are
+dropped scatters) to at least the earlier one's width. With aligned
+avals the serve engine's memoised decode jit is hit, not retraced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import plancache
+from repro.core.backend import get_backend, shard_device_plan
+from repro.core.engine import DevicePlan, pad_device_plan
+
+__all__ = ["Generation", "ReplanSuperseded", "ReplanTicket",
+           "ReplanWorker", "WeightWatcher", "align_device_plans",
+           "build_generation", "fingerprint_params"]
+
+
+def fingerprint_params(params: Any) -> str:
+    """Content hash of a whole params tree's weights.
+
+    Hashes every quantized-weight (``qw``) leaf when the tree has them
+    (the plans only depend on those), else every array leaf — in
+    deterministic walk order, shape+dtype included. This is the
+    generation identity the fleet coalesces and refuses on: same
+    fingerprint ⇒ same plans.
+    """
+    import jax
+
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    qw = [(p, a) for p, a in leaves
+          if any(getattr(k, "key", None) == "qw" for k in p)]
+    h = hashlib.blake2b(digest_size=16)
+    for path, leaf in (qw or leaves):
+        if isinstance(leaf, DevicePlan):
+            continue               # derived from qw; not weight content
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(repr((jax.tree_util.keystr(path),
+                       a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Generation:
+    """One fully-built weight generation, ready to attach to an engine."""
+    gen: int
+    params: Any                # dplans embedded + mesh-placed (if planned)
+    fingerprint: str           # fingerprint_params of the input weights
+    tag: Any = None            # caller's label (checkpoint step, ...)
+    build_s: float = 0.0       # wall seconds build_generation spent
+    plans_built: int = 0       # cold plan builds (cache misses) it caused
+
+
+def _round_pad(n: int) -> int:
+    """Next power of two >= n (>= 8): headroom so the direct width of
+    the *next* generation likely fits without growing the aval again."""
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def _walk_dplans(tree: Any, ref: Any, fn: Callable) -> Any:
+    """Rebuild ``tree`` with ``fn(dplan, ref_dplan_or_None)`` applied to
+    every embedded standard DevicePlan (custom layouts pass through)."""
+    if isinstance(tree, dict):
+        out = {k: _walk_dplans(v,
+                               ref.get(k) if isinstance(ref, dict) else None,
+                               fn)
+               for k, v in tree.items()}
+        if isinstance(tree.get("dplan"), DevicePlan):
+            r = ref.get("dplan") if isinstance(ref, dict) else None
+            out["dplan"] = fn(tree["dplan"],
+                              r if isinstance(r, DevicePlan) else None)
+        return out
+    if isinstance(tree, list):
+        ref = ref if isinstance(ref, list) else [None] * len(tree)
+        return [_walk_dplans(v, r, fn) for v, r in zip(tree, ref)]
+    if isinstance(tree, tuple):
+        ref = ref if isinstance(ref, tuple) else (None,) * len(tree)
+        return tuple(_walk_dplans(v, r, fn) for v, r in zip(tree, ref))
+    return tree
+
+
+def align_device_plans(params: Any, ref_params: Any | None) -> Any:
+    """Pad ``params``' embedded DevicePlans so their leaf avals match
+    ``ref_params``' (the currently-serving generation).
+
+    The direct-dispatch width is the ONE DevicePlan dimension that
+    depends on weight content; everything else is signature-shaped.
+    Where the new plan's width already fits under the reference's, it is
+    padded to *exactly* the reference width — identical avals, decode
+    jit cache hit, zero retrace on swap. Where it outgrew the reference,
+    it is padded up to a power-of-two bound instead (one retrace now,
+    headroom for the generations after). Padding is bit-exact
+    (:func:`repro.core.engine.pad_device_plan`). Plans whose signature
+    (t/bits/n/k/groups) differs from the reference are left alone — that
+    swap is architecturally different and rejected downstream anyway.
+    """
+    if ref_params is None:
+        return _walk_dplans(
+            params, None,
+            lambda d, r: pad_device_plan(
+                d, _round_pad(int(d.direct_idx.shape[-1]))))
+
+    def align(d: DevicePlan, r: DevicePlan | None) -> DevicePlan:
+        if r is None or (d.t, d.bits, d.n, d.k, d.groups) != (
+                r.t, r.bits, r.n, r.k, r.groups):
+            return d
+        need = int(d.direct_idx.shape[-1])
+        have = int(r.direct_idx.shape[-1])
+        return pad_device_plan(d, have if need <= have
+                               else _round_pad(need))
+
+    return _walk_dplans(params, ref_params, align)
+
+
+def build_generation(model, params, *, ref: Any = None, gen: int = 0,
+                     tag: Any = None, cache=None, mesh=None,
+                     specs=None) -> Generation:
+    """Plan + compile + attach + align ONE weight generation, off-path.
+
+    ``params`` are raw (un-attached) weights; ``ref`` is the currently
+    *serving* generation's params (attached), used only for pad
+    alignment — pass ``None`` for a cold start. Plans build through
+    ``cache`` (default: the process cache, which is also what the
+    qlinear host-callback backends consult — warming it here keeps even
+    the non-device-resident ``engine`` backend's first post-swap decode
+    off the plan-build path). Non-PTQ / non-planned configs pass the
+    params through untouched (a generation is then just a tagged params
+    handle). Raises whatever the plan build raises — the caller
+    (:class:`ReplanWorker`) turns that into "keep serving the previous
+    generation".
+    """
+    t0 = time.perf_counter()
+    cache = plancache.default_cache() if cache is None else cache
+    fp = fingerprint_params(params)
+    q = getattr(model.cfg, "quant", None)
+    built = 0
+    attached = params
+    if q is not None and q.mode == "ptq":
+        b = get_backend(q)
+        if b.needs_plan:
+            built = plancache.precompile(params, q, cache)["built"]
+        if b.needs_plan and b.device_resident:
+            attached = plancache.attach_device_plans(params, q, cache)
+            attached = align_device_plans(attached, ref)
+            if mesh is not None:
+                sp = specs if specs is not None else b.plan_specs(mesh)
+                attached = _walk_dplans(
+                    attached, None,
+                    lambda d, r: shard_device_plan(d, mesh, sp))
+    return Generation(gen=gen, params=attached, fingerprint=fp, tag=tag,
+                      build_s=time.perf_counter() - t0, plans_built=built)
+
+
+class ReplanSuperseded(RuntimeError):
+    """A queued (not yet started) replan was replaced by newer weights
+    before its build began; its ticket resolves with this error."""
+
+
+class ReplanTicket:
+    """Handle on one submitted replan: wait on it, read the result."""
+
+    def __init__(self, fingerprint: str):
+        self.fingerprint = fingerprint
+        self.generation: Generation | None = None
+        self.error: BaseException | None = None
+        self._event = threading.Event()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until the build finished (ok or failed); False on
+        timeout."""
+        return self._event.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def _resolve(self, generation=None, error=None) -> None:
+        self.generation, self.error = generation, error
+        self._event.set()
+
+    def __repr__(self) -> str:
+        state = ("pending" if not self.done else
+                 "failed" if self.error is not None else "ready")
+        return f"ReplanTicket({self.fingerprint[:8]}, {state})"
+
+
+class ReplanWorker:
+    """Background thread that rebuilds plan generations off the hot path.
+
+    ``submit(params)`` fingerprints the weights and returns a
+    :class:`ReplanTicket` immediately; the worker thread runs
+    :func:`build_generation` and calls ``on_ready(generation)`` — wire
+    that to ``ServeEngine.swap_params`` (which only *stages*; the engine
+    applies at its next step boundary, so calling it from this thread is
+    safe). On a build failure ``on_error(exc)`` fires and nothing
+    reaches the engine: the previous generation keeps serving (the
+    rollback guarantee).
+
+    Coalescing mirrors the plan cache's ``_Pending`` discipline one
+    level up: a submit whose fingerprint matches the build in flight,
+    the queued build, or the last completed build returns that ticket
+    instead of re-building. The queue is depth-1, newest wins — a
+    superseded (never-started) ticket resolves with
+    :class:`ReplanSuperseded`; re-planning for weights that are already
+    stale would only delay the freshest ones.
+
+    Alignment reference: the worker aligns each build against the params
+    of the last generation it built (or the ``reference=`` it was seeded
+    with — pass the engine's gen-0 serving params), which is exactly the
+    aval chain the engine's decode jit has seen.
+    """
+
+    def __init__(self, model, *, cache=None, mesh=None, specs=None,
+                 reference: Any = None,
+                 on_ready: Callable[[Generation], Any] | None = None,
+                 on_error: Callable[[BaseException], Any] | None = None):
+        self.model = model
+        self.cache = cache
+        self.mesh = mesh
+        self.specs = specs
+        self.on_ready = on_ready
+        self.on_error = on_error
+        self._ref = reference
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = False
+        self._next: tuple[Any, Any, ReplanTicket] | None = None
+        self._inflight: ReplanTicket | None = None
+        self._last: ReplanTicket | None = None
+        self._gen = 0
+        self._thread: threading.Thread | None = None
+        self.counters = {"submitted": 0, "coalesced": 0, "superseded": 0,
+                         "built": 0, "failed": 0}
+
+    # -- lifecycle ---------------------------------------------------------
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._loop,
+                                            name="replan-worker",
+                                            daemon=True)
+            self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Stop after the in-flight build (if any) finishes."""
+        with self._lock:
+            self._stop = True
+            nxt, self._next = self._next, None
+        if nxt is not None:
+            self.counters["superseded"] += 1
+            nxt[2]._resolve(error=ReplanSuperseded("worker stopped"))
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def __enter__(self) -> "ReplanWorker":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission --------------------------------------------------------
+    def submit(self, params, *, tag: Any = None) -> ReplanTicket:
+        """Schedule a rebuild for these weights; returns immediately."""
+        fp = fingerprint_params(params)
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("ReplanWorker is stopped")
+            self.counters["submitted"] += 1
+            for t in (self._inflight, self._last):
+                if (t is not None and t.fingerprint == fp
+                        and t.error is None):
+                    self.counters["coalesced"] += 1
+                    return t
+            if self._next is not None:
+                if self._next[2].fingerprint == fp:
+                    self.counters["coalesced"] += 1
+                    return self._next[2]
+                old = self._next[2]
+                self.counters["superseded"] += 1
+                old._resolve(error=ReplanSuperseded(
+                    f"{old.fingerprint[:8]} superseded by {fp[:8]}"))
+            ticket = ReplanTicket(fp)
+            self._next = (params, tag, ticket)
+        self._ensure_thread()
+        self._wake.set()
+        return ticket
+
+    # -- the worker thread -------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            self._wake.wait()
+            with self._lock:
+                if self._stop and self._next is None:
+                    return
+                self._wake.clear()
+                job, self._next = self._next, None
+                if job is None:
+                    continue
+                params, tag, ticket = job
+                self._inflight = ticket
+                self._gen += 1
+                gen_id = self._gen
+            try:
+                gen = build_generation(
+                    self.model, params, ref=self._ref, gen=gen_id,
+                    tag=tag, cache=self.cache, mesh=self.mesh,
+                    specs=self.specs)
+            except BaseException as e:  # noqa: BLE001 — rollback path
+                with self._lock:
+                    self._inflight = None
+                self.counters["failed"] += 1
+                ticket._resolve(error=e)
+                if self.on_error is not None:
+                    self.on_error(e)
+            else:
+                with self._lock:
+                    self._inflight = None
+                    self._last = ticket
+                    self._ref = gen.params
+                self.counters["built"] += 1
+                ticket._resolve(generation=gen)
+                if self.on_ready is not None:
+                    self.on_ready(gen)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {**self.counters,
+                    "inflight": self._inflight is not None,
+                    "queued": self._next is not None}
+
+
+class WeightWatcher:
+    """Poll a checkpoint directory for new weights, feed them to a
+    :class:`ReplanWorker`.
+
+    ``ckpt_dir`` uses the ``repro.distributed.checkpoint`` layout
+    (``step_N/`` + ``latest`` marker — the marker is written last, so a
+    half-written checkpoint is never picked up). ``template`` is a
+    params tree with the expected structure/shapes (e.g. the raw params
+    the engine was started from). The serve loop calls :meth:`poll`
+    between host steps; it is cheap (one small file read) until a new
+    step appears, at which point the restore + ``worker.submit`` happen
+    synchronously and the plan build itself runs on the worker thread.
+    """
+
+    def __init__(self, ckpt_dir, template, worker: ReplanWorker):
+        self.ckpt_dir = ckpt_dir
+        self.template = template
+        self.worker = worker
+        self.seen_step: int | None = None
+
+    def poll(self) -> ReplanTicket | None:
+        """Check for a new checkpoint; submit it if found."""
+        from repro.distributed import checkpoint
+
+        step = checkpoint.latest_step(self.ckpt_dir)
+        if step is None or step == self.seen_step:
+            return None
+        params = checkpoint.restore(self.ckpt_dir, step, self.template)
+        self.seen_step = step
+        return self.worker.submit(params, tag=step)

@@ -44,6 +44,23 @@ selected backend's serving programs under the selected mesh before any
 weight is initialised, and refuses to serve on any error finding — the
 same gate CI runs, one flag away at launch time.
 
+Fleet flags (docs/FLEET.md):
+
+  * ``--role planner --bundle-dir D`` plans + compiles every layer once
+    and writes fingerprinted plan bundles to ``D`` (no serving);
+    ``--role server --bundle-dir D`` attaches those bundles instead of
+    planning — zero plan builds on the serve cell, refusal if the
+    bundle's weight fingerprint / config / backend don't match.
+  * ``--watch-weights D`` (with ``--continuous``) serves through a live
+    weight update: a ``ReplanWorker`` rebuilds plans on a background
+    thread when a new checkpoint lands in ``D`` and the engine hot-swaps
+    at a step boundary — in-flight requests finish on the weights that
+    admitted them, decode is not retraced. The launcher itself stages
+    the update (re-init with ``--swap-seed`` written as a checkpoint
+    after ``--swap-after`` host steps) so the swap is reproducible;
+    ``--assert-swap-identity`` then checks every finished request
+    bit-matches the one-shot path on its own generation's weights.
+
 ``--path`` is the deprecated spelling of ``--backend``.
 """
 from __future__ import annotations
@@ -64,8 +81,17 @@ from repro.models.model import Model
 from repro.train.serve_step import greedy_generate
 
 
-def _serve_continuous(model, params, cfg, args, mesh, name):
-    """Continuous-batching serve: staggered arrivals through ServeEngine."""
+def _serve_continuous(model, params, cfg, args, mesh, name,
+                      raw_params=None):
+    """Continuous-batching serve: staggered arrivals through ServeEngine.
+
+    With ``--watch-weights`` the launcher stages a live weight update mid
+    run: half the requests are admitted on generation 0, a fresh
+    checkpoint is written after ``--swap-after`` host steps, the
+    ``WeightWatcher``/``ReplanWorker`` pair rebuilds plans off-thread
+    while the engine keeps stepping, and the remaining requests land on
+    generation 1 after the atomic swap.
+    """
     from repro.serve import ServeEngine
 
     ps = args.page_size
@@ -84,15 +110,59 @@ def _serve_continuous(model, params, cfg, args, mesh, name):
                    0, cfg.vocab,
                    size=args.prompt_len - args.prompt_len // 2).tolist()
                for i in range(args.requests)]
+
+    hot = args.watch_weights
+    worker = watcher = None
+    gen_raw = {0: raw_params}
+    failures = []
+    if hot:
+        from repro.distributed import checkpoint
+        from repro.fleet import ReplanWorker, WeightWatcher
+
+        def _on_ready(g):
+            new_gen = eng.swap_params(g.params, tag=g.tag)
+            print(f"[hotswap] generation {new_gen} staged "
+                  f"(checkpoint step {g.tag}, build {g.build_s:.2f}s, "
+                  f"{g.plans_built} plan builds, off-thread)")
+
+        def _on_error(e):
+            failures.append(e)
+            print(f"[hotswap] replan FAILED — previous generation keeps "
+                  f"serving (rollback): {e}")
+
+        worker = ReplanWorker(model, mesh=mesh, reference=params,
+                              on_ready=_on_ready, on_error=_on_error)
+        watcher = WeightWatcher(hot, raw_params, worker)
+        # only react to checkpoints newer than whatever the dir holds now
+        watcher.seen_step = checkpoint.latest_step(hot)
+        new_raw = model.init(jax.random.PRNGKey(args.swap_seed))
+        gen_raw[1] = new_raw
+        ckpt_written = False
+
+    # with a staged swap, the second half of the requests waits for gen 1
+    first = (args.requests + 1) // 2 if hot else args.requests
     submitted = host_step = 0
     t0 = time.time()
-    while submitted < args.requests or eng.queue or eng.active:
-        if (submitted < args.requests
+    while (submitted < args.requests or eng.queue or eng.active
+           or (hot and eng.generation == 0 and not failures)):
+        limit = (first if (hot and eng.generation == 0)
+                 else args.requests)
+        if (submitted < limit
                 and host_step >= submitted * args.arrive_every):
             eng.submit(prompts[submitted], args.gen)
             submitted += 1
+        if hot:
+            if not ckpt_written and host_step >= args.swap_after:
+                step = (watcher.seen_step or 0) + 1
+                checkpoint.save(hot, step, new_raw)
+                ckpt_written = True
+                print(f"[hotswap] new weights written as checkpoint "
+                      f"step {step} at host step {host_step}")
+            watcher.poll()
         eng.step()
         host_step += 1
+    if worker is not None:
+        worker.stop()
     dt = time.time() - t0
     rep = eng.report()
     mode = "fp" if args.fp else f"W{args.w_bits}A8+KV8/{name}"
@@ -119,8 +189,58 @@ def _serve_continuous(model, params, cfg, args, mesh, name):
           f"batched_calls={c['prefill_batched_calls']} "
           f"pad_rows={c['prefill_pad_rows']}")
     for r in eng.finished:
-        print(f"  req {r.rid}: {r.tokens}")
+        gen = f" gen={r.gen}" if hot else ""
+        print(f"  req {r.rid}:{gen} {r.tokens}")
+    if hot:
+        _hotswap_report(model, eng, args, failures, gen_raw, worker)
     return eng
+
+
+def _hotswap_report(model, eng, args, failures, gen_raw, worker):
+    """Print the swap outcome; with --assert-swap-identity, bit-compare
+    every finished request against the one-shot path on its own
+    generation's weights (SystemExit on any mismatch or failed build)."""
+    s = eng.stats()
+    print(f"[hotswap] generation={s['generation']} "
+          f"swaps={eng.counters['swaps']} "
+          f"retired={eng.counters['generations_retired']} "
+          f"decode_jit_traces={s['decode_jit_traces']} "
+          f"prefill_jit_traces={s['prefill_jit_traces']} | "
+          f"worker: {worker.stats()}")
+    if failures:
+        if args.assert_swap_identity:
+            raise SystemExit(f"[hotswap] replan failed: {failures[0]}")
+        return
+    if not args.assert_swap_identity:
+        return
+    # 1-device references, as in the serve-engine tests: the request
+    # alone through greedy_generate on its generation's weights (plans
+    # re-attached without the mesh — bit-identical by the mesh contract)
+    ps = args.page_size
+    max_len = -(-(args.prompt_len + args.gen) // ps) * ps
+    ref_params = {g: model.attach_device_plans(raw)
+                  for g, raw in gen_raw.items() if raw is not None}
+    gens_seen = sorted({r.gen for r in eng.finished})
+    bad = 0
+    for r in eng.finished:
+        if r.gen not in ref_params:
+            continue
+        batch = {"tokens": jnp.asarray([list(r.prompt)], jnp.int32)}
+        want = np.asarray(greedy_generate(
+            model, ref_params[r.gen], batch, max_len=max_len,
+            n_steps=r.max_new_tokens))[0]
+        got = np.asarray(r.tokens)
+        if got.shape != want.shape or not np.array_equal(got, want):
+            bad += 1
+            print(f"[hotswap] MISMATCH req {r.rid} (gen {r.gen}): "
+                  f"{got} != {want}")
+    if bad or s["generation"] < 1:
+        raise SystemExit(
+            f"[hotswap] identity check FAILED: {bad} mismatching "
+            f"request(s), final generation {s['generation']}")
+    print(f"[hotswap] identity OK: {len(eng.finished)} request(s) across "
+          f"generations {gens_seen} each bit-match the one-shot path on "
+          f"their own weights")
 
 
 def main():
@@ -173,7 +293,36 @@ def main():
                     help="skip the offline plan warmup (planned backends "
                     "only; plans then build lazily on first forward per "
                     "weight)")
+    ap.add_argument("--bundle-dir", default=None, metavar="DIR",
+                    help="plan-bundle directory for --role (docs/FLEET.md)")
+    ap.add_argument("--role", default=None, choices=("planner", "server"),
+                    help="planner: plan once + write bundles to "
+                    "--bundle-dir and exit; server: attach plans from "
+                    "--bundle-dir instead of planning (zero plan builds, "
+                    "fingerprint-checked)")
+    ap.add_argument("--watch-weights", default=None, metavar="DIR",
+                    help="(--continuous) hot-swap drill: watch DIR for "
+                    "new weight checkpoints, re-plan off-thread and swap "
+                    "at a step boundary; the launcher writes the new "
+                    "checkpoint itself after --swap-after host steps")
+    ap.add_argument("--swap-after", type=int, default=3,
+                    help="(--watch-weights) host steps before the new "
+                    "weights checkpoint is written")
+    ap.add_argument("--swap-seed", type=int, default=1234,
+                    help="(--watch-weights) PRNG seed for the new "
+                    "weights (re-init; any seed != 0 is a real update)")
+    ap.add_argument("--assert-swap-identity", action="store_true",
+                    help="(--watch-weights) exit non-zero unless every "
+                    "finished request bit-matches the one-shot path on "
+                    "its own generation's weights")
     args = ap.parse_args()
+    if args.role is not None and not args.bundle_dir:
+        ap.error(f"--role {args.role} needs --bundle-dir")
+    if args.watch_weights and not args.continuous:
+        ap.error("--watch-weights needs --continuous (the hot-swap "
+                 "protocol lives on the serve engine)")
+    if args.role is not None and args.fp:
+        ap.error("plan bundles carry quantized-weight plans; drop --fp")
 
     name = args.backend or "int_dot"
     if args.path is not None:
@@ -208,14 +357,51 @@ def main():
                                             backend=name)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    raw_params = params
 
     planned = not args.fp and backend.needs_plan
     device_path = planned and backend.device_resident
+
+    if args.role == "planner":
+        from repro.fleet import write_bundles
+        try:
+            manifest = write_bundles(params, cfg.quant, args.bundle_dir,
+                                     backend=name)
+        except ValueError as e:
+            ap.error(str(e))
+        print(f"[planner] {args.bundle_dir}: {manifest['n_files']} bundle "
+              f"file(s) over {manifest['n_layers']} layer(s), backend="
+              f"{manifest['backend']}, weights="
+              f"{manifest['weights_fingerprint'][:12]} "
+              f"({manifest['plan_wall_s']:.2f}s plan+compile)")
+        return
+
     plan_stats, t_plan, t_attach = {}, 0.0, 0.0
     if planned:
         from repro.core import plancache
         cache = plancache.default_cache()
         cache.reset_stats()
+    if args.role == "server":
+        if not device_path:
+            ap.error(f"--role server attaches device plan bundles; "
+                     f"backend '{name}' does not execute from them")
+        from repro.core.engine import BundleMismatchError
+        from repro.fleet import read_manifest, load_bundles
+        t0 = time.time()
+        try:
+            params = load_bundles(params, cfg.quant, args.bundle_dir,
+                                  mesh=mesh)
+        except (FileNotFoundError, BundleMismatchError) as e:
+            raise SystemExit(f"[server] bundle refused: {e}")
+        t_attach = time.time() - t0
+        s = cache.stats()
+        print(f"[server] attached {read_manifest(args.bundle_dir)['n_files']} "
+              f"bundle(s) from {args.bundle_dir} in {t_attach:.2f}s | "
+              f"plan builds on this cell: {s['misses']}")
+        if s["misses"]:
+            raise SystemExit("[server] bundle attach built plans locally "
+                             "— the planner artifact is incomplete")
+    elif planned:
         if not args.no_precompile:
             t0 = time.time()
             plan_stats = model.precompile_plans(params)
@@ -234,7 +420,8 @@ def main():
         reason = model.supports_paged()
         if reason is not None:
             ap.error(f"--continuous needs the paged serve path: {reason}")
-        _serve_continuous(model, params, cfg, args, mesh, name)
+        _serve_continuous(model, params, cfg, args, mesh, name,
+                          raw_params=raw_params)
         if planned:
             s = cache.stats()
             print(f"[plan cache] offline plan-build {t_plan:.2f}s | "

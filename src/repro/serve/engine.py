@@ -44,17 +44,31 @@ stream is **bit-identical** to running it alone through
 has the same sequence extent, masked lanes contribute exact zeros, and
 per-row math is batch-independent.
 
-The engine owns one page pool per (model, params): weight updates need a
-fresh engine (the trie indexes K/V bytes, which are a function of both).
-All scheduling state is host-side and single-threaded.
+Weight updates hot-swap without draining: the engine's per-weight state
+(params, page pool, allocator, prefix trie, slot arrays) lives in a
+**generation cell**, and :meth:`ServeEngine.swap_params` stages a new
+cell that is attached atomically at the next ``step()`` boundary — never
+mid-step. In-flight requests finish on the generation that admitted them
+(K/V bytes are a function of tokens *and* weights, so a request's cell —
+pool, trie and all — stays alive until its last token); requests
+admitted after the swap run on the new generation. The jitted device
+programs are created once per engine and shared across generations, so a
+swap whose params keep the same leaf avals (weight *values* changed, not
+shapes — see ``repro.fleet.replan.align_device_plans`` for keeping
+``DevicePlan`` pads stable) re-uses every existing trace:
+``stats()["decode_jit_traces"]`` stays at 1 through the swap. See
+docs/FLEET.md for the full protocol (staging, rollback, accounting).
+All scheduling state is host-side; ``swap_params`` may be called from a
+background replan thread (it only stages, under a lock).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +80,7 @@ from repro.models.model import Model
 from repro.serve.paging import PageAllocator, PrefixTrie
 from repro.train.serve_step import _place_batch
 
-__all__ = ["Request", "ServeEngine", "bucket"]
+__all__ = ["Request", "ServeEngine", "SwapMismatchError", "bucket"]
 
 
 def bucket(n: int, cap: int) -> int:
@@ -84,6 +98,14 @@ def bucket(n: int, cap: int) -> int:
     return min(b, cap)
 
 
+class SwapMismatchError(ValueError):
+    """``swap_params`` was handed params the engine cannot serve: the
+    pytree structure differs from the serving generation's. A hot swap
+    replaces weight *values* (and, for planned backends, the DevicePlans
+    riding inside the params); it never changes model architecture —
+    that needs a new engine."""
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request plus the engine's bookkeeping for it."""
@@ -95,6 +117,7 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     page_ids: list = dataclasses.field(default_factory=list)
     slot: int | None = None
+    gen: int = 0               # weight generation that admitted (and owns) it
     length: int = 0            # K/V rows written: prompt, then +1 per step
     shared_pages: int = 0      # prompt pages taken from the prefix trie
     prefill_computed: int = 0  # prompt positions the prefill forward ran
@@ -116,8 +139,35 @@ class Request:
         return list(self.out)
 
 
+@dataclasses.dataclass
+class _Cell:
+    """One weight generation's serving state.
+
+    Everything whose bytes are a function of the weights lives here —
+    params, page pool, allocator, prefix trie (it indexes K/V *bytes*),
+    the packed slot arrays — so a hot swap is "append a new cell" and a
+    request's generation is pinned by which cell admitted it. The jitted
+    device programs stay on the engine: cells share them, which is what
+    makes an aval-stable swap retrace-free.
+    """
+    gen: int
+    params: Any
+    pool: Any
+    alloc: PageAllocator
+    trie: PrefixTrie
+    slots: list
+    tokens: np.ndarray
+    steps: np.ndarray
+    table: np.ndarray
+    tag: Any = None            # caller's label (checkpoint step, ...)
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+
 class ServeEngine:
-    """Paged-KV continuous-batching scheduler around one (model, params).
+    """Paged-KV continuous-batching scheduler around one model.
 
     ``n_slots`` fixes the packed decode batch; ``max_len`` bounds any
     request's total (prompt + generated - 1) positions and must be a
@@ -134,6 +184,10 @@ class ServeEngine:
     kernel (cost grows with live pages, not ``max_len``);
     ``bucket_prefill=False`` reverts admission to per-request batch-1
     prefills. Both default to the pure-jnp oracle paths.
+
+    Weights are swappable at runtime via :meth:`swap_params` — see the
+    module docstring and docs/FLEET.md. ``params``/``pool``/``alloc``/
+    ``trie``/``slots`` read through to the *current* generation's cell.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 4,
@@ -151,7 +205,6 @@ class ServeEngine:
                 f"max_len ({max_len}) must be a multiple of page_size "
                 f"({page_size}) so a slot's page table covers it exactly")
         self.model = model
-        self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
@@ -165,29 +218,58 @@ class ServeEngine:
         # dense reference attends over full-precision K/V while prefilling,
         # and a dequantized prefix would break bit-identity
         self.exact_pool = model.cfg.kv_cache_bits != 8
-        self.pool = model.init_page_pool(self.n_pages, page_size)
-        self.alloc = PageAllocator(self.n_pages)
-        self.trie = PrefixTrie(page_size)
-        self.slots: list[int | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.step_count = 0
         self._next_rid = 0
-        self._prefill = jax.jit(model.prefill_paged,
+        # generation cells: [-1] is current (admission target), earlier
+        # entries are draining their in-flight requests on old weights
+        self._cells: list[_Cell] = [self._new_cell(0, params)]
+        self._staged: tuple | None = None
+        self._swap_lock = threading.Lock()
+        self.swap_steps: list[int] = []
+        # true trace counts: the wrapped bodies below run exactly once per
+        # jit trace, so these count actual (re)traces — the observable the
+        # hot-swap no-retrace guarantee is asserted on (trace *keys* in
+        # _trace_keys count requested specializations, not compilations)
+        self.jit_traces = {"prefill": 0, "prefill_batched": 0, "decode": 0}
+        traces = self.jit_traces
+
+        def _prefill_fn(params, tokens, pool, *, prefix_page_ids,
+                        write_page_ids, write_offs, write_from=0):
+            traces["prefill"] += 1
+            return model.prefill_paged(
+                params, tokens, pool, prefix_page_ids=prefix_page_ids,
+                write_page_ids=write_page_ids, write_offs=write_offs,
+                write_from=write_from)
+
+        def _prefill_batched_fn(params, tokens, pool, *, prefix_page_ids,
+                                prefix_lens, suffix_lens, write_page_ids,
+                                write_offs, write_pos):
+            traces["prefill_batched"] += 1
+            return model.prefill_paged_batched(
+                params, tokens, pool, prefix_page_ids=prefix_page_ids,
+                prefix_lens=prefix_lens, suffix_lens=suffix_lens,
+                write_page_ids=write_page_ids, write_offs=write_offs,
+                write_pos=write_pos)
+
+        def _decode_fn(params, pool, tokens, page_indices, steps,
+                       kernel=None):
+            traces["decode"] += 1
+            return model.decode_step_paged(params, pool, tokens,
+                                           page_indices, steps,
+                                           kernel=kernel)
+
+        self._prefill = jax.jit(_prefill_fn,
                                 static_argnames=("write_from",),
                                 donate_argnums=(2,) if donate else ())
-        self._prefill_batched = jax.jit(model.prefill_paged_batched,
+        self._prefill_batched = jax.jit(_prefill_batched_fn,
                                         donate_argnums=(2,) if donate
                                         else ())
-        self._decode = jax.jit(model.decode_step_paged,
+        self._decode = jax.jit(_decode_fn,
                                static_argnames=("kernel",),
                                donate_argnums=(1,) if donate else ())
-        # persistent packed-decode host arrays, updated incrementally on
-        # admit/alloc/finish instead of np.zeros + full refill per step
-        self._tokens = np.zeros((n_slots, 1), np.int32)
-        self._steps = np.zeros((n_slots,), np.int32)
-        self._table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         # distinct jit specializations actually requested, per program —
         # the observable the bucketing win is measured by
         self._trace_keys: dict[str, set] = {"prefill": set(),
@@ -198,7 +280,118 @@ class ServeEngine:
                          "prefill_skipped": 0, "prefill_written": 0,
                          "prefill_calls": 0, "prefill_batched_calls": 0,
                          "prefill_batched_rows": 0, "prefill_pad_rows": 0,
-                         "bucket_hits": 0}
+                         "bucket_hits": 0, "swaps": 0, "swaps_staged": 0,
+                         "swaps_superseded": 0, "swap_shape_drift": 0,
+                         "generations_retired": 0}
+
+    def _new_cell(self, gen: int, params, tag=None) -> _Cell:
+        return _Cell(
+            gen=gen, params=params,
+            pool=self.model.init_page_pool(self.n_pages, self.page_size),
+            alloc=PageAllocator(self.n_pages),
+            trie=PrefixTrie(self.page_size),
+            slots=[None] * self.n_slots,
+            tokens=np.zeros((self.n_slots, 1), np.int32),
+            steps=np.zeros((self.n_slots,), np.int32),
+            table=np.zeros((self.n_slots, self.pages_per_slot), np.int32),
+            tag=tag)
+
+    # -- current-generation views (admission target; old cells drain) -----
+    @property
+    def cell(self) -> _Cell:
+        return self._cells[-1]
+
+    @property
+    def generation(self) -> int:
+        return self.cell.gen
+
+    @property
+    def params(self):
+        return self.cell.params
+
+    @property
+    def pool(self):
+        return self.cell.pool
+
+    @property
+    def alloc(self) -> PageAllocator:
+        return self.cell.alloc
+
+    @property
+    def trie(self) -> PrefixTrie:
+        return self.cell.trie
+
+    @property
+    def slots(self) -> list:
+        return self.cell.slots
+
+    # -- hot swap ----------------------------------------------------------
+    def swap_params(self, params, *, tag=None) -> int:
+        """Stage a weight-generation swap; returns the new generation id.
+
+        Applied atomically at the start of the next :meth:`step` — never
+        mid-step. Non-draining: requests already in flight keep decoding
+        on the generation that admitted them (its cell — params, pool,
+        trie — stays alive until they finish); requests admitted after
+        the swap run on the new weights. Thread-safe: this only *stages*
+        (a background replan worker may call it); the scheduling thread
+        applies. Staging again before the next step supersedes the
+        earlier staged params (newest weights win — counted in
+        ``swaps_superseded``).
+
+        ``params`` must have the serving generation's pytree structure
+        (else :class:`SwapMismatchError`; the caller's rollback is to
+        simply not swap). Leaf-shape drift is allowed — it happens when a
+        planned backend's ``DevicePlan`` direct width grows past the pad
+        (see ``repro.fleet.replan.align_device_plans``) — but costs one
+        retrace and is surfaced in ``swap_shape_drift``.
+        """
+        cur = self.cell.params
+        if (jax.tree_util.tree_structure(params)
+                != jax.tree_util.tree_structure(cur)):
+            raise SwapMismatchError(
+                "swap_params: new params pytree structure differs from "
+                "the serving generation's — a hot swap replaces weight "
+                "values, not model architecture (build a new engine for "
+                "that)")
+        drift = sum(
+            getattr(a, "shape", None) != getattr(b, "shape", None)
+            or getattr(a, "dtype", None) != getattr(b, "dtype", None)
+            for a, b in zip(jax.tree_util.tree_leaves(params),
+                            jax.tree_util.tree_leaves(cur)))
+        with self._swap_lock:
+            superseded = self._staged is not None
+            self._staged = (params, tag, drift)
+        self.counters["swaps_staged"] += 1
+        if superseded:
+            self.counters["swaps_superseded"] += 1
+        return self.cell.gen + 1
+
+    def _apply_staged(self) -> None:
+        """Attach a staged generation (scheduling thread, step boundary)."""
+        with self._swap_lock:
+            staged, self._staged = self._staged, None
+        if staged is None:
+            return
+        params, tag, drift = staged
+        self._cells.append(self._new_cell(self.cell.gen + 1, params,
+                                          tag=tag))
+        self.counters["swaps"] += 1
+        self.counters["swap_shape_drift"] += drift
+        self.swap_steps.append(self.step_count)
+
+    def _retire_cells(self) -> None:
+        """Drop old generations whose last in-flight request finished
+        (frees their pool/trie); the current cell always stays."""
+        for cell in [c for c in self._cells[:-1] if c.n_active == 0]:
+            self._cells.remove(cell)
+            self.counters["generations_retired"] += 1
+
+    def _cell_of(self, gen: int) -> _Cell:
+        for cell in self._cells:
+            if cell.gen == gen:
+                return cell
+        raise KeyError(f"generation {gen} already retired")
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -231,11 +424,11 @@ class ServeEngine:
         return (jax_compat.set_mesh(self.mesh) if self.mesh is not None
                 else contextlib.nullcontext())
 
-    def _alloc_page(self) -> int | None:
+    def _alloc_page(self, cell: _Cell) -> int | None:
         """One page, evicting trie-only pages (LRU) under pressure."""
-        pid = self.alloc.alloc()
-        if pid is None and self.trie.evict(self.alloc, 1):
-            pid = self.alloc.alloc()
+        pid = cell.alloc.alloc()
+        if pid is None and cell.trie.evict(cell.alloc, 1):
+            pid = cell.alloc.alloc()
         return pid
 
     def _note_trace(self, kind: str, key: tuple) -> bool:
@@ -254,34 +447,38 @@ class ServeEngine:
         prompt is indexed into the trie immediately — a request arriving
         later in the same wave already shares these pages (the run
         partitioning in :meth:`_admit` keeps its prefill *after* the
-        batch that writes them).
+        batch that writes them). Always against the current cell: only
+        the current generation admits.
         """
+        cell = self.cell
         L, ps = len(req.prompt), self.page_size
         n_prompt_pages = -(-L // ps)
         # cap the match so the suffix keeps >= 1 token: the last prompt
         # position must run through prefill to produce the step-0 logits,
         # and decode must never append to a page another request holds
-        shared = self.trie.match(req.prompt, max_pages=(L - 1) // ps)
+        shared = cell.trie.match(req.prompt, max_pages=(L - 1) // ps)
         for pid in shared:            # pin before eviction can see them
-            self.alloc.incref(pid)
+            cell.alloc.incref(pid)
         need = n_prompt_pages - len(shared)
-        if self.alloc.free_count < need:
-            self.trie.evict(self.alloc, need - self.alloc.free_count)
-        if self.alloc.free_count < need:
+        if cell.alloc.free_count < need:
+            cell.trie.evict(cell.alloc, need - cell.alloc.free_count)
+        if cell.alloc.free_count < need:
             for pid in shared:
-                self.alloc.decref(pid)
+                cell.alloc.decref(pid)
             return None
-        page_ids = list(shared) + [self.alloc.alloc() for _ in range(need)]
-        self.trie.insert(req.prompt, page_ids, self.alloc)
+        page_ids = list(shared) + [cell.alloc.alloc() for _ in range(need)]
+        cell.trie.insert(req.prompt, page_ids, cell.alloc)
         return {"req": req, "page_ids": page_ids, "shared": len(shared)}
 
     def _seat(self, res: dict, tok: int) -> None:
         """Post-prefill bookkeeping: record token, counters, slot/table."""
+        cell = self.cell
         req = res["req"]
         L, ps = len(req.prompt), self.page_size
         shared = res["shared"]
         shared_len = shared * ps
         start = shared_len if self.exact_pool else 0
+        req.gen = cell.gen
         req.out.append(tok)
         req.length = L
         req.page_ids = res["page_ids"]
@@ -298,16 +495,17 @@ class ServeEngine:
         if len(req.out) >= req.max_new_tokens or tok == req.eos_id:
             self._finish(req)
         else:
-            slot = self.slots.index(None)
+            slot = cell.slots.index(None)
             req.slot = slot
-            self.slots[slot] = req.rid
+            cell.slots[slot] = req.rid
             self.active[req.rid] = req
-            self._tokens[slot, 0] = tok
-            self._steps[slot] = req.length
-            self._table[slot, :len(req.page_ids)] = req.page_ids
+            cell.tokens[slot, 0] = tok
+            cell.steps[slot] = req.length
+            cell.table[slot, :len(req.page_ids)] = req.page_ids
 
     def _prefill_one(self, res: dict) -> None:
         """Per-request batch-1 prefill (the original, always-exact path)."""
+        cell = self.cell
         req, page_ids = res["req"], res["page_ids"]
         L, ps = len(req.prompt), self.page_size
         shared_len = res["shared"] * ps
@@ -324,8 +522,8 @@ class ServeEngine:
         self._note_trace("prefill", ("one", L - start, start // ps,
                                      write_from))
         with self._mesh_ctx():
-            logits, self.pool = self._prefill(
-                self.params, jnp.asarray(suffix), self.pool,
+            logits, cell.pool = self._prefill(
+                cell.params, jnp.asarray(suffix), cell.pool,
                 prefix_page_ids=jnp.asarray(prefix),
                 write_page_ids=jnp.asarray(wp), write_offs=jnp.asarray(wo),
                 write_from=write_from)
@@ -345,6 +543,7 @@ class ServeEngine:
 
     def _prefill_group(self, group: list[dict]) -> None:
         """One padded batched prefill over same-bucket reservations."""
+        cell = self.cell
         ps = self.page_size
         lb, n_pre = self._bucket_key(group[0])
         if not self.bucket_prefill or n_pre * ps + lb > CHUNK_THRESHOLD:
@@ -379,8 +578,8 @@ class ServeEngine:
         if self._note_trace("prefill", ("batched", nb, lb, n_pre)):
             self.counters["bucket_hits"] += 1
         with self._mesh_ctx():
-            logits, self.pool = self._prefill_batched(
-                self.params, jnp.asarray(tokens), self.pool,
+            logits, cell.pool = self._prefill_batched(
+                cell.params, jnp.asarray(tokens), cell.pool,
                 prefix_page_ids=jnp.asarray(prefix),
                 prefix_lens=jnp.asarray(plens),
                 suffix_lens=jnp.asarray(slens),
@@ -428,74 +627,92 @@ class ServeEngine:
                     self._prefill_group(group)
 
     def _finish(self, req: Request) -> None:
+        cell = self._cell_of(req.gen)
         if req.slot is not None:
-            self.slots[req.slot] = None
+            cell.slots[req.slot] = None
             del self.active[req.rid]
-            self._tokens[req.slot, 0] = 0
-            self._steps[req.slot] = 0
-            self._table[req.slot, :] = 0
+            cell.tokens[req.slot, 0] = 0
+            cell.steps[req.slot] = 0
+            cell.table[req.slot, :] = 0
             req.slot = None
         for pid in req.page_ids:
-            self.alloc.decref(pid)    # trie-held pages survive (refcount)
+            cell.alloc.decref(pid)    # trie-held pages survive (refcount)
         req.t_done = time.perf_counter()
         req.done_step = self.step_count
         self.counters["completed"] += 1
         self.finished.append(req)
 
+    def _decode_cell(self, cell: _Cell,
+                     packed: list[tuple[int, Request]]) -> None:
+        """One packed decode over ``cell``'s active slots."""
+        self.counters["decode_steps"] += 1
+        for s, req in packed:
+            # this step writes K/V position req.length — grow the
+            # request's table when it crosses a page boundary; the
+            # persistent host arrays only take the per-slot deltas
+            # (_seat/_finish maintain the rest)
+            if req.length // self.page_size >= len(req.page_ids):
+                pid = self._alloc_page(cell)
+                if pid is None:
+                    raise RuntimeError(
+                        f"page pool exhausted ({cell.alloc!r}) — "
+                        f"size n_pages for the slot working set")
+                req.page_ids.append(pid)
+                cell.table[s, len(req.page_ids) - 1] = pid
+            cell.tokens[s, 0] = req.out[-1]
+            cell.steps[s] = req.length
+        batch = {"tokens": cell.tokens, "table": cell.table,
+                 "steps": cell.steps}
+        self._note_trace("decode", ("decode", self.paged_kernel))
+        with self._mesh_ctx():
+            if self.mesh is not None:
+                batch = _place_batch(batch, self.mesh)
+            logits, cell.pool = self._decode(
+                cell.params, cell.pool, jnp.asarray(batch["tokens"]),
+                jnp.asarray(batch["table"]),
+                jnp.asarray(batch["steps"]),
+                kernel=self.paged_kernel)
+            toks = np.asarray(
+                jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
+        done = []
+        for s, req in packed:
+            tok = int(toks[s])
+            req.out.append(tok)
+            req.length += 1
+            self.counters["decode_tokens"] += 1
+            if (len(req.out) >= req.max_new_tokens
+                    or tok == req.eos_id):
+                done.append(req)
+        for req in done:
+            self._finish(req)
+
     def step(self) -> list[Request]:
-        """Admit arrivals, run one packed decode step, retire finished.
+        """Attach a staged swap, admit arrivals, run one packed decode
+        step per live generation, retire finished requests and drained
+        generations.
 
         Returns the requests that finished during this call (their
         ``tokens`` are final). A request admitted this step decodes this
         step: its prefill token feeds the packed decode exactly like
-        ``greedy_generate``'s first loop iteration.
+        ``greedy_generate``'s first loop iteration. A staged swap is
+        applied *before* admission, so requests taken off the queue this
+        step already run on the new weights, while earlier generations
+        keep decoding their in-flight requests in the same call —
+        swapping never skips anyone's decode step.
         """
         n_done = len(self.finished)
+        self._apply_staged()
         self._admit()
-        packed = [(s, self.active[rid])
-                  for s, rid in enumerate(self.slots) if rid is not None]
-        if packed:
+        packed_by_cell = [
+            (cell, [(s, self.active[rid])
+                    for s, rid in enumerate(cell.slots) if rid is not None])
+            for cell in list(self._cells)]
+        if any(packed for _, packed in packed_by_cell):
             self.step_count += 1
-            self.counters["decode_steps"] += 1
-            for s, req in packed:
-                # this step writes K/V position req.length — grow the
-                # request's table when it crosses a page boundary; the
-                # persistent host arrays only take the per-slot deltas
-                # (_seat/_finish maintain the rest)
-                if req.length // self.page_size >= len(req.page_ids):
-                    pid = self._alloc_page()
-                    if pid is None:
-                        raise RuntimeError(
-                            f"page pool exhausted ({self.alloc!r}) — "
-                            f"size n_pages for the slot working set")
-                    req.page_ids.append(pid)
-                    self._table[s, len(req.page_ids) - 1] = pid
-                self._tokens[s, 0] = req.out[-1]
-                self._steps[s] = req.length
-            batch = {"tokens": self._tokens, "table": self._table,
-                     "steps": self._steps}
-            self._note_trace("decode", ("decode", self.paged_kernel))
-            with self._mesh_ctx():
-                if self.mesh is not None:
-                    batch = _place_batch(batch, self.mesh)
-                logits, self.pool = self._decode(
-                    self.params, self.pool, jnp.asarray(batch["tokens"]),
-                    jnp.asarray(batch["table"]),
-                    jnp.asarray(batch["steps"]),
-                    kernel=self.paged_kernel)
-                toks = np.asarray(
-                    jnp.argmax(logits[:, -1], -1).astype(jnp.int32))
-            done = []
-            for s, req in packed:
-                tok = int(toks[s])
-                req.out.append(tok)
-                req.length += 1
-                self.counters["decode_tokens"] += 1
-                if (len(req.out) >= req.max_new_tokens
-                        or tok == req.eos_id):
-                    done.append(req)
-            for req in done:
-                self._finish(req)
+            for cell, packed in packed_by_cell:
+                if packed:
+                    self._decode_cell(cell, packed)
+        self._retire_cells()
         return self.finished[n_done:]
 
     def run(self, max_steps: int = 100_000) -> list[Request]:
@@ -520,11 +737,23 @@ class ServeEngine:
 
     # -- introspection -----------------------------------------------------
     def stats(self) -> dict:
+        active_by_gen: dict[int, int] = {}
+        for r in self.active.values():
+            active_by_gen[r.gen] = active_by_gen.get(r.gen, 0) + 1
+        cur = self.cell.gen
         return {**self.counters, "queued": len(self.queue),
                 "active": len(self.active),
                 "finished": len(self.finished),
                 "prefill_traces": len(self._trace_keys["prefill"]),
                 "decode_traces": len(self._trace_keys["decode"]),
+                "prefill_jit_traces": (self.jit_traces["prefill"]
+                                       + self.jit_traces["prefill_batched"]),
+                "decode_jit_traces": self.jit_traces["decode"],
+                "generation": cur,
+                "draining_generations": len(self._cells) - 1,
+                "active_by_gen": active_by_gen,
+                "in_flight_prev_gen": sum(n for g, n in active_by_gen.items()
+                                          if g != cur),
                 "pages": self.alloc.stats(), "trie": self.trie.stats()}
 
     def report(self) -> dict:
@@ -532,6 +761,7 @@ class ServeEngine:
         reqs = self.finished
         per = [{"rid": r.rid, "prompt_len": len(r.prompt),
                 "n_tokens": len(r.out),
+                "gen": r.gen,
                 "shared_pages": r.shared_pages,
                 "prefill_computed": r.prefill_computed,
                 "ttft_s": (r.t_admit or r.t_submit) - r.t_submit,
@@ -547,6 +777,7 @@ class ServeEngine:
                 "counters": self.stats()}
 
     def __repr__(self) -> str:
-        return (f"ServeEngine(slots={sum(r is not None for r in self.slots)}"
-                f"/{self.n_slots} queued={len(self.queue)} "
+        return (f"ServeEngine(gen={self.cell.gen} "
+                f"slots={self.cell.n_active}/{self.n_slots} "
+                f"queued={len(self.queue)} "
                 f"finished={len(self.finished)} steps={self.step_count})")

@@ -337,12 +337,14 @@ def test_engine_backend_declares_callback_exemption():
 
 def test_lint_backend_end_to_end_clean():
     """The acceptance smoke: a real registered backend's whole program
-    set (prefill, donated decode, paged decode, the two fast-path
-    programs, forest) lints clean."""
+    set (prefill, donated decode, paged decode + its post-hot-swap twin,
+    the two fast-path programs, forest) lints clean."""
     from repro.analysis.programs import lint_backend
     progs, findings = lint_backend("engine_jit", n_layers=1, batch=2)
     assert [p.name for p in progs] == ["prefill", "decode",
-                                      "paged-decode", "paged-attention",
+                                      "paged-decode",
+                                      "paged-decode-swapped",
+                                      "paged-attention",
                                       "prefill-bucketed", "forest"]
     assert findings == [], [f.format() for f in findings]
 

@@ -1,0 +1,526 @@
+"""Live-weight serving fleet (ISSUE 9): async re-plan, atomic hot-swap,
+plan-bundle distribution.
+
+The acceptance properties pinned here:
+
+* **hot swap is atomic and non-draining** — requests in flight when
+  ``ServeEngine.swap_params`` lands finish bit-exactly on the weights
+  that admitted them, requests admitted after land bit-exactly on the
+  new weights (vs ``greedy_generate`` on that generation's params), and
+  the decode jit is traced exactly once across the whole drill — for
+  every device-resident backend in the registry;
+* **rollback** — a failed replan (or a structurally-wrong swap) never
+  reaches the engine: the previous generation keeps serving;
+* **bundles** — a planner cell's ``write_bundles`` attaches on a fresh
+  serve cell with ZERO plan builds and identical tokens; stale weights,
+  config drift and byte corruption are refused (corruption even under
+  ``force=True``); plus the ``ExecutionPlan.load_bundle`` validation
+  matrix itself (the satellite API).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.backend import EngineConfig, get_backend, list_backends
+from repro.core.engine import (BundleMismatchError, ExecutionPlan,
+                               compile_plan, pad_device_plan)
+from repro.core.plancache import (PlanCache, _canonical, set_default_cache,
+                                  weight_fingerprint)
+from repro.launch.specs import serve_config
+from repro.models.model import Model
+from repro.serve import ServeEngine
+from repro.serve.engine import SwapMismatchError
+from repro.fleet import (ReplanSuperseded, ReplanWorker, WeightWatcher,
+                         align_device_plans, build_generation,
+                         fingerprint_params, load_bundles, read_manifest,
+                         write_bundles)
+from repro.train.serve_step import greedy_generate
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEVICE_BACKENDS = [n for n in list_backends()
+                   if get_backend(n).device_resident
+                   and get_backend(n).cpu_ok]
+
+
+@pytest.fixture
+def cache():
+    """Fresh process-default plan cache per test; restores the previous."""
+    c = PlanCache(capacity=128)
+    prev = set_default_cache(c)
+    yield c
+    set_default_cache(prev)
+
+
+@pytest.fixture(scope="module")
+def jit_cell():
+    """One engine_jit serve cell with TWO raw weight generations."""
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                       backend="engine_jit")
+    model = Model(cfg)
+    return (cfg, model, model.init(jax.random.PRNGKey(0)),
+            model.init(jax.random.PRNGKey(1234)))
+
+
+def _reference(model, params, prompt, max_len, n_new):
+    """The request alone through the one-shot path, same max_len."""
+    batch = {"tokens": jnp.asarray([list(prompt)], jnp.int32)}
+    return np.asarray(greedy_generate(model, params, batch,
+                                      max_len=max_len, n_steps=n_new))[0]
+
+
+def _prompts(cfg, plen=8, n=4, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, size=plen).tolist()
+            for _ in range(n)]
+
+
+def _w(seed=0, n=9, k=32):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-8, 8, size=(n, k))
+
+
+# -- ExecutionPlan.load_bundle validation (the satellite API) ----------------
+
+def _plan_file(tmp_path, w, *, fingerprint="auto", device=True,
+               name="plan.npz"):
+    c = PlanCache()
+    plan = c.get_or_build(w, 4, 8)
+    fp = (weight_fingerprint(_canonical(w)) if fingerprint == "auto"
+          else fingerprint)
+    path = str(tmp_path / name)
+    plan.save(path, device=compile_plan(plan) if device else None,
+              backend="engine_jit" if device else None, fingerprint=fp)
+    return path, plan
+
+
+def test_load_bundle_roundtrip_validates_ok(tmp_path):
+    w = _w(0)
+    path, plan = _plan_file(tmp_path, w)
+    b = ExecutionPlan.load_bundle(path, qw=w,
+                                  cfg=EngineConfig(w_bits=4, t=8, groups=1))
+    assert b.backend == "engine_jit" and b.device is not None
+    assert b.fingerprint == weight_fingerprint(_canonical(w))
+    assert (b.plan.n, b.plan.k) == (plan.n, plan.k)
+
+
+def test_load_bundle_refuses_wrong_weights(tmp_path):
+    path, _ = _plan_file(tmp_path, _w(0))
+    w2 = _w(0)
+    w2[0, 0] ^= 1                           # same shape, different bits
+    with pytest.raises(BundleMismatchError, match="stale plan"):
+        ExecutionPlan.load_bundle(path, qw=w2)
+    # force= is the explicit escape hatch
+    assert ExecutionPlan.load_bundle(path, qw=w2, force=True).plan
+
+
+def test_load_bundle_refuses_wrong_config(tmp_path):
+    path, _ = _plan_file(tmp_path, _w(1))
+    with pytest.raises(BundleMismatchError, match="serving config"):
+        ExecutionPlan.load_bundle(
+            path, cfg=EngineConfig(w_bits=8, t=8, groups=1))
+    assert ExecutionPlan.load_bundle(
+        path, cfg=EngineConfig(w_bits=8, t=8, groups=1), force=True).plan
+
+
+def test_load_bundle_shape_mismatch_raises_even_forced(tmp_path):
+    path, _ = _plan_file(tmp_path, _w(2))
+    with pytest.raises(BundleMismatchError, match="n, k"):
+        ExecutionPlan.load_bundle(path, qw=_w(2, n=5, k=64), force=True)
+
+
+def test_load_bundle_fingerprintless_cannot_validate(tmp_path):
+    w = _w(3)
+    path, _ = _plan_file(tmp_path, w, fingerprint=None)
+    with pytest.raises(BundleMismatchError, match="no weight fingerprint"):
+        ExecutionPlan.load_bundle(path, qw=w)
+    assert ExecutionPlan.load_bundle(path, qw=w, force=True).plan
+    # and with no validation requested, a fingerprint-less file is fine
+    assert ExecutionPlan.load_bundle(path).fingerprint is None
+
+
+# -- pad alignment (the no-retrace mechanism) --------------------------------
+
+def test_pad_device_plan_is_bit_exact():
+    b = get_backend("engine_jit")
+    ecfg = EngineConfig(w_bits=4, t=8, groups=1)
+    w = _w(4)
+    plan = b.plan(w, ecfg)
+    dplan = b.compile(plan)
+    d = int(dplan.direct_idx.shape[-1])
+    padded = pad_device_plan(dplan, d + 7)
+    assert int(padded.direct_idx.shape[-1]) == d + 7
+    x = np.random.default_rng(0).integers(-128, 128, size=(3, 32))
+    qx, qw = jnp.asarray(x, jnp.int8), jnp.asarray(w, jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(b.execute(qx, qw, plan, dplan, ecfg)),
+        np.asarray(b.execute(qx, qw, plan, padded, ecfg)))
+    with pytest.raises(ValueError):
+        pad_device_plan(dplan, d - 1)       # truncation is never silent
+    assert pad_device_plan(dplan, d) is dplan
+
+
+def test_align_device_plans_matches_avals(cache, jit_cell):
+    """A later generation aligned against an earlier one lowers to the
+    SAME leaf avals — the property that makes the swap retrace-free."""
+    _, model, raw0, raw1 = jit_cell
+    gen0 = build_generation(model, raw0, gen=0)
+    gen1 = build_generation(model, raw1, ref=gen0.params, gen=1)
+    a0 = [(l.shape, str(l.dtype)) for l in jax.tree.leaves(gen0.params)]
+    a1 = [(l.shape, str(l.dtype)) for l in jax.tree.leaves(gen1.params)]
+    assert a0 == a1
+    # alignment is pure padding: unaligned plans differ only in the
+    # direct width, and aligning is idempotent
+    assert align_device_plans(gen1.params, gen0.params) is not None
+    assert fingerprint_params(gen1.params) == fingerprint_params(raw1)
+
+
+# -- ReplanWorker ------------------------------------------------------------
+
+def test_replan_worker_builds_and_notifies(cache, jit_cell):
+    _, model, raw0, raw1 = jit_cell
+    ready = []
+    with ReplanWorker(model, on_ready=ready.append) as w:
+        t = w.submit(raw1, tag="step-1")
+        assert t.wait(60) and t.error is None
+    g = t.generation
+    assert ready == [g]
+    assert g.fingerprint == fingerprint_params(raw1)
+    assert g.tag == "step-1" and g.plans_built > 0
+    assert w.counters["built"] == 1 and w.counters["failed"] == 0
+
+
+def test_replan_worker_coalesces_and_supersedes(cache, jit_cell,
+                                                monkeypatch):
+    """Same-fingerprint submits share a ticket; a queued-but-unstarted
+    build is superseded by newer weights (newest wins, depth-1 queue)."""
+    import repro.fleet.replan as R
+    _, model, raw0, raw1 = jit_cell
+    gate, entered = threading.Event(), threading.Event()
+    real = R.build_generation
+
+    def gated(model, params, **kw):
+        entered.set()
+        assert gate.wait(timeout=60)
+        return real(model, params, **kw)
+    monkeypatch.setattr(R, "build_generation", gated)
+
+    w = ReplanWorker(model)
+    try:
+        t0 = w.submit(raw0)
+        assert entered.wait(60)             # raw0 build is parked
+        assert w.submit(raw0) is t0         # in-flight coalesce
+        t1 = w.submit(raw1)                 # queued
+        assert w.submit(raw1) is t1         # queued coalesce
+        raw2 = model.init(jax.random.PRNGKey(99))
+        t2 = w.submit(raw2)                 # supersedes the queued raw1
+        assert t1.done and isinstance(t1.error, ReplanSuperseded)
+        gate.set()
+        assert t0.wait(60) and t2.wait(60)
+        assert t0.error is None and t2.error is None
+        assert t2.generation.gen > t0.generation.gen
+        assert w.submit(raw2) is t2         # last-completed coalesce
+        assert w.counters["coalesced"] == 3
+        assert w.counters["superseded"] == 1
+    finally:
+        gate.set()
+        w.stop()
+
+
+def test_replan_worker_failure_is_rollback(cache, jit_cell, monkeypatch):
+    """A failed build resolves the ticket with the error and fires
+    on_error — on_ready never sees it, so nothing reaches the engine."""
+    import repro.fleet.replan as R
+    _, model, raw0, raw1 = jit_cell
+    monkeypatch.setattr(R, "build_generation",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("scoreboard build exploded")))
+    ready, errs = [], []
+    with ReplanWorker(model, on_ready=ready.append,
+                      on_error=errs.append) as w:
+        t = w.submit(raw1)
+        assert t.wait(60)
+    assert isinstance(t.error, RuntimeError) and t.generation is None
+    assert ready == [] and len(errs) == 1
+    assert w.counters["failed"] == 1 and w.counters["built"] == 0
+
+
+# -- hot swap under load -----------------------------------------------------
+
+def _drive(eng, pending, gen_toks):
+    """Submit ``pending`` one per step and run the engine dry."""
+    submitted = 0
+    while submitted < len(pending) or eng.queue or eng.active:
+        if submitted < len(pending):
+            eng.submit(pending[submitted], gen_toks)
+            submitted += 1
+        eng.step()
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_swap_under_load_bit_exact_per_generation(cache, backend):
+    """The tentpole property: a swap lands while requests are in flight;
+    every request bit-matches the one-shot path on the weights of the
+    generation that ADMITTED it, and decode is traced exactly once."""
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                       backend=backend)
+    model = Model(cfg)
+    raw0 = model.init(jax.random.PRNGKey(0))
+    raw1 = model.init(jax.random.PRNGKey(1234))
+    gen0 = build_generation(model, raw0, gen=0)
+    gen1 = build_generation(model, raw1, ref=gen0.params, gen=1)
+    plen, gen_toks, max_len = 8, 4, 16
+    prompts = _prompts(cfg, plen=plen, n=4)
+
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=max_len,
+                      page_size=4)
+    for p in prompts[:2]:
+        eng.submit(p, gen_toks)
+    eng.step()                              # gen-0 requests are in flight
+    assert eng.swap_params(gen1.params, tag="swap") == 1
+    _drive(eng, prompts[2:], gen_toks)
+
+    gens = sorted({r.gen for r in eng.finished})
+    assert gens == [0, 1], "both generations must have served requests"
+    gparams = {0: gen0.params, 1: gen1.params}
+    for r in eng.finished:
+        want = _reference(model, gparams[r.gen], r.prompt, max_len,
+                          r.max_new_tokens)
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), want,
+            err_msg=f"rid={r.rid} gen={r.gen} ({backend})")
+    s = eng.stats()
+    assert s["decode_jit_traces"] == 1, "hot swap retraced decode"
+    assert s["generation"] == 1 and s["in_flight_prev_gen"] == 0
+    assert eng.counters["swaps"] == 1
+    assert eng.counters["swap_shape_drift"] == 0
+    assert eng.counters["generations_retired"] == 1
+
+
+def test_swap_via_replan_worker_end_to_end(cache, jit_cell):
+    """The full wiring: worker builds off-thread, on_ready stages the
+    swap, the engine applies it at the next step boundary."""
+    cfg, model, raw0, raw1 = jit_cell
+    gen0 = build_generation(model, raw0, gen=0)
+    plen, gen_toks, max_len = 8, 4, 16
+    prompts = _prompts(cfg, plen=plen, n=3)
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=max_len,
+                      page_size=4)
+    with ReplanWorker(model, reference=gen0.params,
+                      on_ready=lambda g: eng.swap_params(g.params,
+                                                         tag=g.tag)) as w:
+        eng.submit(prompts[0], gen_toks)
+        eng.step()
+        t = w.submit(raw1, tag="ckpt-1")
+        # the engine keeps stepping while the build runs off-thread
+        while not t.done:
+            eng.step()
+        assert t.error is None
+        _drive(eng, prompts[1:], gen_toks)
+    assert eng.generation == 1 and eng.counters["swaps"] == 1
+    gparams = {0: gen0.params, 1: t.generation.params}
+    for r in eng.finished:
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens),
+            _reference(model, gparams[r.gen], r.prompt, max_len,
+                       r.max_new_tokens), err_msg=f"rid={r.rid}")
+    assert eng.stats()["decode_jit_traces"] == 1
+
+
+def test_swap_structure_mismatch_rolls_back(cache, jit_cell):
+    """A structurally-wrong swap refuses up front; the engine keeps
+    serving the current generation untouched."""
+    cfg, model, raw0, _ = jit_cell
+    gen0 = build_generation(model, raw0, gen=0)
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=16,
+                      page_size=4)
+    other = Model(cfg.replace(n_layers=1)).init(jax.random.PRNGKey(5))
+    with pytest.raises(SwapMismatchError):
+        eng.swap_params(other)
+    assert eng.generation == 0 and eng.counters["swaps"] == 0
+    assert eng.counters["swaps_staged"] == 0    # refused before staging
+    p = _prompts(cfg, n=1)[0]
+    _drive(eng, [p], 4)                     # still serving, bit-exact
+    np.testing.assert_array_equal(
+        np.asarray(eng.finished[0].tokens),
+        _reference(model, gen0.params, p, 16, 4))
+
+
+def test_superseding_swap_drops_staged_generation(cache, jit_cell):
+    """Two swaps staged between the same pair of steps: only the newest
+    is ever attached (the older one is superseded, never admitted to)."""
+    _, model, raw0, raw1 = jit_cell
+    gen0 = build_generation(model, raw0, gen=0)
+    gen1 = build_generation(model, raw1, ref=gen0.params, gen=1)
+    raw2 = model.init(jax.random.PRNGKey(77))
+    gen2 = build_generation(model, raw2, ref=gen0.params, gen=2)
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=16,
+                      page_size=4)
+    eng.swap_params(gen1.params, tag="a")
+    final = eng.swap_params(gen2.params, tag="b")
+    eng.step()
+    assert eng.generation == final
+    assert eng.counters["swaps_superseded"] == 1
+    assert eng.counters["swaps"] == 1       # one attach, not two
+    assert eng.cell.tag == "b"
+
+
+# -- plan bundles ------------------------------------------------------------
+
+def test_bundles_roundtrip_zero_builds_same_tokens(cache, jit_cell,
+                                                   tmp_path):
+    """Planner writes once; a fresh serve cell attaches with ZERO plan
+    builds and generates identical tokens."""
+    cfg, model, raw0, _ = jit_cell
+    bdir = str(tmp_path / "bundles")
+    manifest = write_bundles(raw0, cfg.quant, bdir)
+    assert manifest["n_layers"] > 0 and manifest["n_files"] > 0
+    assert read_manifest(bdir)["weights_fingerprint"] == \
+        fingerprint_params(raw0)
+
+    cell_cache = PlanCache(capacity=128)
+    prev = set_default_cache(cell_cache)
+    try:
+        attached = load_bundles(raw0, cfg.quant, bdir)
+    finally:
+        set_default_cache(prev)
+    assert cell_cache.stats()["misses"] == 0, \
+        "the serve cell must not build plans"
+    p = _prompts(cfg, n=1)[0]
+    np.testing.assert_array_equal(
+        _reference(model, attached, p, 16, 4),
+        _reference(model, model.attach_device_plans(raw0), p, 16, 4))
+
+
+def test_bundles_refuse_stale_weights_config_and_backend(cache, jit_cell,
+                                                         tmp_path):
+    cfg, model, raw0, raw1 = jit_cell
+    bdir = str(tmp_path / "bundles")
+    write_bundles(raw0, cfg.quant, bdir)
+    with pytest.raises(BundleMismatchError, match="stale bundle"):
+        load_bundles(raw1, cfg.quant, bdir)      # planned from raw0
+    cfg8 = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                        w_bits=8, backend="engine_jit")
+    with pytest.raises(BundleMismatchError):     # config or backend drift
+        load_bundles(raw0, cfg8.quant, bdir)
+    # force= attaches the stale bundle anyway (explicitly unsafe)
+    assert load_bundles(raw1, cfg.quant, bdir, force=True) is not None
+
+
+def test_bundles_corruption_refused_even_forced(cache, jit_cell, tmp_path):
+    cfg, model, raw0, _ = jit_cell
+    bdir = str(tmp_path / "bundles")
+    manifest = write_bundles(raw0, cfg.quant, bdir)
+    victim = next(iter(manifest["layers"].values()))["files"][0]["file"]
+    path = os.path.join(bdir, victim)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(BundleMismatchError, match="hash mismatch"):
+        load_bundles(raw0, cfg.quant, bdir)
+    with pytest.raises(BundleMismatchError, match="hash mismatch"):
+        load_bundles(raw0, cfg.quant, bdir, force=True)
+
+
+def test_bundles_refuse_model_shape_drift(cache, jit_cell, tmp_path):
+    cfg, model, raw0, _ = jit_cell
+    bdir = str(tmp_path / "bundles")
+    write_bundles(raw0, cfg.quant, bdir)
+    small = Model(cfg.replace(n_layers=1)).init(jax.random.PRNGKey(0))
+    with pytest.raises(BundleMismatchError):
+        load_bundles(small, cfg.quant, bdir, force=True)
+
+
+def test_read_manifest_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        read_manifest(str(tmp_path / "nope"))
+
+
+def test_bundles_refuse_non_device_backend(cache, tmp_path):
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                       backend="engine")     # host-callback, no DevicePlans
+    raw = Model(cfg).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="device plans"):
+        write_bundles(raw, cfg.quant, str(tmp_path / "b"))
+
+
+# -- weight watcher ----------------------------------------------------------
+
+def test_weight_watcher_picks_up_new_checkpoints(cache, jit_cell,
+                                                 tmp_path):
+    from repro.distributed import checkpoint
+    _, model, raw0, raw1 = jit_cell
+    ckpt = str(tmp_path / "weights")
+    with ReplanWorker(model) as w:
+        watcher = WeightWatcher(ckpt, raw0, w)
+        assert watcher.poll() is None       # empty dir: nothing to do
+        checkpoint.save(ckpt, 1, raw1)
+        t = watcher.poll()
+        assert t is not None and t.wait(60) and t.error is None
+        assert t.generation.tag == 1
+        assert t.generation.fingerprint == fingerprint_params(raw1)
+        assert watcher.poll() is None       # same step: seen, no resubmit
+
+
+# -- the cold-process oracle (slow) ------------------------------------------
+
+@pytest.mark.slow
+def test_post_swap_matches_cold_started_process(cache, jit_cell):
+    """ISSUE 9 acceptance, literally: requests admitted after the swap
+    are bit-identical to a COLD-STARTED process serving the new weights
+    (subprocess twin, test_serve_mesh.py's pattern)."""
+    cfg, model, raw0, raw1 = jit_cell
+    gen0 = build_generation(model, raw0, gen=0)
+    gen1 = build_generation(model, raw1, ref=gen0.params, gen=1)
+    plen, gen_toks, max_len = 8, 4, 16
+    prompts = _prompts(cfg, plen=plen, n=2)
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=max_len,
+                      page_size=4)
+    eng.submit(prompts[0], gen_toks)
+    eng.step()
+    eng.swap_params(gen1.params)
+    _drive(eng, prompts[1:], gen_toks)
+    post = {tuple(r.prompt): r.tokens for r in eng.finished if r.gen == 1}
+    assert post, "no request landed on the new generation"
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_reduced
+        from repro.launch.specs import serve_config
+        from repro.models.model import Model
+        from repro.train.serve_step import greedy_generate
+        cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=2),
+                           backend="engine_jit")
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(1234))   # the NEW weights
+        params = model.attach_device_plans(params)
+        for prompt in {list(post)!r}:
+            batch = {{"tokens": jnp.asarray([list(prompt)], jnp.int32)}}
+            toks = np.asarray(greedy_generate(
+                model, params, batch, max_len={max_len},
+                n_steps={gen_toks}))[0]
+            print("COLD", list(prompt), list(toks))
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=480)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    cold = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("COLD "):
+            prompt, toks = eval(line[5:].replace("] [", "]|[")
+                                .split("|")[0]), \
+                eval(line[5:].replace("] [", "]|[").split("|")[1])
+            cold[tuple(prompt)] = toks
+    assert cold.keys() == post.keys()
+    for prompt, toks in post.items():
+        assert list(toks) == cold[prompt], f"prompt {prompt}"

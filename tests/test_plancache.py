@@ -594,3 +594,83 @@ def test_builder_failure_releases_waiters(rng, monkeypatch):
     # and the key is fully healthy afterwards
     assert c.get_or_build(w, 4, 8) is outcome["second"]
     assert c.stats()["hits"] == 1
+
+
+def _gated_build(monkeypatch, gate, entered):
+    """Monkeypatch the plan body to park inside the build until ``gate``
+    opens, signalling ``entered`` first (the pending-slot race widener)."""
+    import repro.core.plancache as PC
+    real_plan = PC.BatchedTransitiveEngine.plan
+
+    def gated(self, qw, groups=1):
+        entered.set()
+        assert gate.wait(timeout=30), "test gate never opened"
+        return real_plan(self, qw, groups=groups)
+    monkeypatch.setattr(PC.BatchedTransitiveEngine, "plan", gated)
+
+
+def test_invalidate_during_pending_build_not_resurrected(rng, monkeypatch):
+    """The hot-swap race (PR 9): weights are invalidated WHILE their plan
+    is still building on another thread. The finishing build must not
+    publish the now-dead entry — a lookup after the dust settles rebuilds
+    instead of hitting a resurrected stale plan."""
+    import threading
+    gate, entered = threading.Event(), threading.Event()
+    _gated_build(monkeypatch, gate, entered)
+
+    c = PlanCache()
+    w = _w(rng)
+    got = {}
+    t = threading.Thread(target=lambda: got.update(
+        plan=c.get_or_build(w, 4, 8)))
+    t.start()
+    try:
+        assert entered.wait(timeout=30)
+        # the builder is parked inside the build: invalidate its weight
+        assert c.invalidate(w) == 0        # nothing published yet ...
+    finally:
+        gate.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    # ... but the tombstone stopped the publish: the build's own caller
+    # still got a usable plan, the cache stayed empty, and the discard
+    # was counted as the invalidation it is
+    assert got["plan"] is not None
+    assert len(c) == 0
+    assert c.stats()["invalidations"] == 1
+    # next lookup is a fresh miss (no resurrection), and THAT entry sticks
+    gate.set()
+    fresh = c.get_or_build(w, 4, 8)
+    assert fresh is not got["plan"]
+    assert len(c) == 1 and c.stats()["misses"] == 2
+    assert c.get_or_build(w, 4, 8) is fresh
+
+
+def test_invalidate_version_during_pending_build_not_resurrected(
+        rng, monkeypatch):
+    """Same race through the version-keyed fast path: invalidate_version
+    lands while the tagged build is in flight; the tag must come back
+    empty, not resurrected."""
+    import threading
+    gate, entered = threading.Event(), threading.Event()
+    _gated_build(monkeypatch, gate, entered)
+
+    c = PlanCache()
+    w = _w(rng)
+    got = {}
+    t = threading.Thread(target=lambda: got.update(
+        plan=c.get_or_build(w, 4, 8, version="layer0")))
+    t.start()
+    try:
+        assert entered.wait(timeout=30)
+        assert c.invalidate_version("layer0") == 0
+    finally:
+        gate.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    assert got["plan"] is not None
+    assert len(c) == 0 and c.stats()["invalidations"] == 1
+    w_new = w.copy()
+    w_new[0, 0] ^= 1                       # the in-place weight update
+    fresh = c.get_or_build(w_new, 4, 8, version="layer0")
+    assert fresh is not got["plan"] and len(c) == 1
