@@ -604,6 +604,30 @@ def serve_bench(smoke: bool = False, out: str = "BENCH_engine.json",
     # restart + the bundle pipeline costs (serve_engine.hotswap.*)
     result["serve_engine"]["hotswap"] = serve_hotswap_bench(smoke=smoke)
 
+    # static-analysis gate overhead (ISSUE 10): verify one plan + its
+    # lowering, and cost one decode jaxpr — the work the publish gates
+    # add per cold build. Tracked so the gates stay off the hot path
+    # (they run once per plan build / bundle load / swap, never per
+    # decode step).
+    import timeit as _timeit
+
+    from repro.analysis.costcheck import jaxpr_cost
+    from repro.analysis.planlint import verify_device_plan, verify_plan
+    from repro.core.backend import get_backend as _get_backend
+    _plan = cache.get_or_build(ws[0], ecfg)
+    _dev = _get_backend("engine_jit").compile(_plan)
+    _n = 3
+    _lint_s = _timeit.timeit(
+        lambda: (verify_plan(_plan), verify_device_plan(_dev, _plan)),
+        number=_n) / _n
+    _w32 = jnp.asarray(ws[0], jnp.int32)
+    _jx = jax.make_jaxpr(
+        lambda x: jnp.einsum("bk,nk->bn", x, _w32)
+    )(jnp.ones((4, k), jnp.int8))
+    _cost_s = _timeit.timeit(lambda: jaxpr_cost(_jx), number=_n) / _n
+    result["analysis"] = {"planlint_us": _lint_s * 1e6,
+                          "costcheck_us": _cost_s * 1e6}
+
     # legacy flat aliases for the PR-2/PR-3 trajectory keys
     eng_e = result["backends"].get("engine", {})
     eng_j = result["backends"].get("engine_jit", {})

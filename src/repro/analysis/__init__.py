@@ -26,7 +26,18 @@ import jax
 from jax import core
 
 from repro.analysis.baseline import (load_baseline, save_baseline,
-                                     split_baselined)
+                                     split_baselined, stale_keys)
+from repro.analysis.costcheck import (CostMetrics, check_budgets,
+                                      crosscheck_costmodel, jaxpr_cost,
+                                      load_budgets, plan_cost,
+                                      program_metrics)
+from repro.analysis.planlint import (PlanVerificationError, gate_params,
+                                     gate_plan, lint_plans,
+                                     list_plan_rules, register_plan_rule,
+                                     unregister_plan_rule,
+                                     verify_bundle_file,
+                                     verify_device_plan, verify_manifest,
+                                     verify_plan)
 from repro.analysis.programs import (PROGRAM_RULES, build_programs,
                                      lint_backend)
 from repro.analysis.rules import (Finding, LintProgram, Rule, get_rule,
@@ -39,9 +50,18 @@ __all__ = ["Finding", "LintProgram", "Rule", "EqnSite", "iter_eqns",
            "register_rule", "unregister_rule", "get_rule", "list_rules",
            "run_rules", "build_programs", "lint_backend", "PROGRAM_RULES",
            "load_baseline", "save_baseline", "split_baselined",
+           "stale_keys",
            "find_violations", "assert_clean", "DEFAULT_RULES",
            "CALLBACK_PRIMS",
-           "SCATTER_PRIMS", "LOOP_PRIMS"]
+           "SCATTER_PRIMS", "LOOP_PRIMS",
+           # plan-IR verifier (planlint.py)
+           "PlanVerificationError", "verify_plan", "verify_device_plan",
+           "verify_manifest", "verify_bundle_file", "gate_plan",
+           "gate_params", "register_plan_rule", "unregister_plan_rule",
+           "list_plan_rules", "lint_plans",
+           # static cost certifier (costcheck.py)
+           "CostMetrics", "jaxpr_cost", "plan_cost", "program_metrics",
+           "crosscheck_costmodel", "load_budgets", "check_budgets"]
 
 # the structural rules assert_clean runs when the caller names none: the
 # invariant the retired string asserts guarded plus its schedule sibling

@@ -17,7 +17,8 @@ from typing import Iterable
 
 from repro.analysis.rules import Finding
 
-__all__ = ["load_baseline", "save_baseline", "split_baselined"]
+__all__ = ["load_baseline", "save_baseline", "split_baselined",
+           "stale_keys"]
 
 
 def load_baseline(path: str | os.PathLike | None) -> frozenset[str]:
@@ -47,6 +48,18 @@ def save_baseline(path: str | os.PathLike,
         for k in keys:
             f.write(k + "\n")
     return len(keys)
+
+
+def stale_keys(baseline: Iterable[str],
+               findings: Iterable[Finding]) -> list[str]:
+    """Baseline entries that no current finding matches.
+
+    A stale entry is dead weight with teeth: the violation it allowed
+    was fixed, but the line would silently re-allow a *recurrence*.
+    ``lint --prune-baseline`` reports these (and with ``--write-baseline``
+    removes them) so the allowlist can't rot."""
+    live = {f.key() for f in findings}
+    return sorted(k for k in frozenset(baseline) if k not in live)
 
 
 def split_baselined(findings: Iterable[Finding],

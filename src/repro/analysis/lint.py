@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.analysis.lint \\
       [--backend engine_jit ...] [--mesh data=4] [--rules r1,r2] \\
+      [--plans] [--budgets [FILE]] [--prune-baseline] \\
       [--baseline FILE | --write-baseline FILE] [--json OUT] [--list-rules]
 
 Builds every registered backend's serving programs (prefill, donated
@@ -11,6 +12,15 @@ and runs every registered rule against them, honoring each backend's
 backend — the same enumeration the CI serve smoke loops, so a future
 ``engine_tpu``/``engine_gpu`` is linted the day it registers (on
 hardware legs, via ``--backend``).
+
+``--plans`` additionally verifies the plan IR itself (``planlint.py``:
+DAG/level-monotone schedule, gather bounds, pad-lane deadness, bundle
+round-trip) and ``--budgets`` enforces the static cost budgets
+(``costcheck.py`` + ``budgets.json``); both streams merge into the same
+findings/baseline/exit-code machinery, so a budget regression fails CI
+exactly like a tracelint violation. ``--prune-baseline`` reports
+baseline entries no current finding matches (add ``--write-baseline``
+to rewrite the file without them).
 
 Exit status 1 iff any non-baselined error-severity finding remains;
 ``--json`` writes the full findings list (CI uploads it as an artifact).
@@ -50,6 +60,16 @@ def main(argv=None) -> int:
                     help="restrict to a comma-separated rule subset")
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--plans", action="store_true",
+                    help="also verify the plan IR (ExecutionPlan / "
+                    "DevicePlan / bundle round-trip) per backend")
+    ap.add_argument("--budgets", nargs="?", const=True, default=None,
+                    metavar="FILE",
+                    help="also enforce static cost budgets (default "
+                    "budget file: analysis/budgets.json)")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="report baseline entries matching no current "
+                    "finding; with --write-baseline, drop them")
     ap.add_argument("--baseline", default=None, metavar="FILE",
                     help="allowlist of known findings (Finding.key lines); "
                     "baselined findings report but do not fail")
@@ -101,7 +121,48 @@ def main(argv=None) -> int:
         for f in findings:
             print(f"  {f.format()}")
 
-    if args.write_baseline:
+    plans_report = budget_report = None
+    if args.plans:
+        from repro.analysis.planlint import lint_plans
+        plans_report, pfindings = lint_plans(backends, mesh=mesh)
+        all_findings.extend(pfindings)
+        status = (f"{len(pfindings)} finding(s)" if pfindings
+                  else "clean")
+        print(f"[planlint]  {len(plans_report)} artifact batch(es) -> "
+              f"{status}")
+        for f in pfindings:
+            print(f"  {f.format()}")
+    if args.budgets is not None:
+        from repro.analysis.costcheck import check_budgets
+        bpath = None if args.budgets is True else args.budgets
+        budget_report, bfindings = check_budgets(
+            backends, mesh=mesh, budgets_path=bpath, arch=args.arch)
+        all_findings.extend(bfindings)
+        n_eval = sum(1 for r in budget_report if "value" in r)
+        print(f"[costcheck] {n_eval} budget evaluation(s) -> "
+              f"{len(bfindings) if bfindings else 'clean'}"
+              f"{' finding(s)' if bfindings else ''}")
+        for f in bfindings:
+            print(f"  {f.format()}")
+
+    if args.prune_baseline:
+        from repro.analysis.baseline import stale_keys
+        stale = stale_keys(baseline, all_findings)
+        for k in stale:
+            print(f"[baseline] stale: {k}")
+        print(f"[baseline] {len(stale)} stale entr"
+              f"{'y' if len(stale) == 1 else 'ies'} of {len(baseline)}")
+        if args.write_baseline:
+            kept = sorted(frozenset(baseline) - set(stale))
+            with open(args.write_baseline, "w") as f:
+                f.write("# tracelint baseline — one Finding.key per "
+                        "line\n")
+                for k in kept:
+                    f.write(k + "\n")
+            print(f"[baseline] wrote {len(kept)} key(s) to "
+                  f"{args.write_baseline}")
+            return 0
+    elif args.write_baseline:
         n = save_baseline(args.write_baseline, all_findings)
         print(f"[tracelint] wrote {n} baseline key(s) to "
               f"{args.write_baseline}")
@@ -120,9 +181,13 @@ def main(argv=None) -> int:
         "seconds": round(dt, 2),
     }
     if args.json:
+        doc = {"summary": summary, "backends": report}
+        if plans_report is not None:
+            doc["plans"] = plans_report
+        if budget_report is not None:
+            doc["budgets"] = budget_report
         with open(args.json, "w") as f:
-            json.dump({"summary": summary, "backends": report}, f,
-                      indent=2)
+            json.dump(doc, f, indent=2)
     print(f"[tracelint] {len(backends)} backend(s)"
           f"{' on mesh ' + args.mesh if args.mesh else ''}: "
           f"{len(all_findings)} finding(s), {len(suppressed)} baselined, "

@@ -1,0 +1,1010 @@
+"""Plan-IR verifier: machine-check the transitive DAG before it runs.
+
+Tracelint (``analysis/rules.py``) guards the *lowered programs*; this
+module guards the *plan artifacts* those programs execute — the
+:class:`~repro.core.engine.ExecutionPlan` schedule, its compiled
+:class:`~repro.core.engine.DevicePlan` gather maps, and the persisted
+plan bundles the fleet layer ships planner→server. The paper's whole
+speedup argument is that the transitive-reuse structure is a DAG whose
+execution order is analyzable ahead of time; these rules are that
+analysis made executable: a corrupted plan is refused with a named
+finding *before* it can silently compute the wrong GEMM.
+
+Rules are registered objects in the same style as ``rules.py`` (one
+process-level registry, loud duplicates) but with their own registry:
+they check numpy plan IR, not jaxprs. Verification is **fail-fast at
+rule granularity**: rules run in registration order and the first rule
+that fires reports alone — downstream rules assume upstream invariants
+(bounds before graph shape before DAG order), so one corruption yields
+exactly one finding whose path names the bad field.
+
+The verifier is wired as a *gate* at the three trust boundaries a plan
+crosses (set ``REPRO_PLANLINT=0`` to disable all three):
+
+* ``PlanCache`` publish (``core/plancache.py``) — a freshly built plan
+  (and its compiled device lowering) is verified before other callers
+  can coalesce onto it;
+* ``fleet.bundles.load_bundles`` on the server role — every bundle file
+  is structurally verified **before** its SHA-256 is checked (a
+  truncated/garbage npz is a planlint refusal, not a hash mismatch),
+  and the manifest itself is a checked artifact;
+* ``ServeEngine.swap_params`` staging — a hot-swap generation's
+  embedded DevicePlans are verified before they are staged, so a
+  corrupt replan can never reach the decode step.
+
+Entry points: :func:`verify_plan`, :func:`verify_device_plan`,
+:func:`verify_bundle_file`, :func:`verify_manifest`, the raising
+``gate_*`` twins, and :func:`lint_plans` (the ``--plans`` half of
+``python -m repro.analysis.lint``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Any, Iterator
+
+import numpy as np
+
+from repro.analysis.rules import Finding
+
+__all__ = ["PlanArtifact", "PlanRule", "PlanVerificationError",
+           "register_plan_rule", "unregister_plan_rule", "get_plan_rule",
+           "list_plan_rules", "enabled", "verify_plan",
+           "verify_device_plan", "verify_bundle_file", "verify_manifest",
+           "gate_plan", "gate_device", "gate_params",
+           "iter_device_plans", "lint_plans"]
+
+
+def enabled() -> bool:
+    """The gates' kill switch: ``REPRO_PLANLINT=0`` disables them."""
+    return os.environ.get("REPRO_PLANLINT", "1").lower() not in (
+        "0", "false", "no", "off")
+
+
+class PlanVerificationError(ValueError):
+    """A plan artifact failed verification at a trust boundary."""
+
+    def __init__(self, findings: list[Finding], where: str) -> None:
+        self.findings = list(findings)
+        self.where = where
+        lines = "\n  ".join(f.format() for f in self.findings)
+        super().__init__(
+            f"planlint: {len(self.findings)} finding(s) at gate "
+            f"'{where}':\n  {lines}")
+
+
+@dataclasses.dataclass
+class PlanArtifact:
+    """One verifiable plan artifact with everything plan rules inspect.
+
+    ``kind`` selects which rules apply: ``"plan"`` (host
+    ``ExecutionPlan``), ``"device"`` (compiled ``DevicePlan``, possibly
+    stacked/padded; ``device_np`` is its leaves pulled to host numpy),
+    ``"manifest"`` (a fleet bundle manifest dict, with ``bundle_dir``
+    for on-disk file checks). ``plan`` rides along on device artifacts
+    when the caller has it, enabling the plan↔device agreement rule.
+    """
+    kind: str
+    name: str                       # Finding.program label
+    backend: str | None = None
+    plan: Any = None                # ExecutionPlan
+    device: Any = None              # DevicePlan
+    device_np: dict[str, np.ndarray] | None = None
+    manifest: dict[str, Any] | None = None
+    bundle_dir: str | None = None
+
+
+class PlanRule:
+    """Base class for one plan-IR invariant (registry mirror of
+    :class:`repro.analysis.rules.Rule`, over plan artifacts).
+
+    ``kinds`` names the artifact kinds the rule applies to; a rule
+    reports **at most one finding** (the first violation, with the
+    total count in the message) so the fail-fast driver's
+    one-corruption-one-finding contract holds.
+    """
+    name: str = ""
+    severity: str = "error"
+    kinds: tuple[str, ...] = ("plan",)
+    description: str = ""
+
+    def check(self, art: PlanArtifact) -> list[Finding]:
+        raise NotImplementedError
+
+    def _finding(self, art: PlanArtifact, message: str, *,
+                 path: str = "", field: str | None = None) -> Finding:
+        return Finding(rule=self.name, severity=self.severity,
+                       program=art.name, backend=art.backend,
+                       path=path, primitive=field, message=message)
+
+
+_PLAN_REGISTRY: dict[str, PlanRule] = {}
+
+
+def register_plan_rule(rule: PlanRule, *, replace: bool = False) -> PlanRule:
+    name = getattr(rule, "name", "")
+    if not name or not isinstance(name, str):
+        raise ValueError(f"plan rule must declare a non-empty string "
+                         f"name, got {name!r}")
+    if name in _PLAN_REGISTRY and not replace:
+        raise ValueError(f"plan rule '{name}' is already registered "
+                         f"({_PLAN_REGISTRY[name]!r}); pass replace=True "
+                         f"to override")
+    _PLAN_REGISTRY[name] = rule
+    return rule
+
+
+def unregister_plan_rule(name: str) -> PlanRule:
+    if name not in _PLAN_REGISTRY:
+        raise KeyError(f"unknown plan rule {name!r}; registered: "
+                       f"{', '.join(sorted(_PLAN_REGISTRY))}")
+    return _PLAN_REGISTRY.pop(name)
+
+
+def get_plan_rule(name: str) -> PlanRule:
+    try:
+        return _PLAN_REGISTRY[name]
+    except (KeyError, TypeError):
+        raise KeyError(f"unknown plan rule {name!r}; registered: "
+                       f"{', '.join(sorted(_PLAN_REGISTRY))}") from None
+
+
+def list_plan_rules() -> tuple[str, ...]:
+    return tuple(_PLAN_REGISTRY)
+
+
+def _run(art: PlanArtifact) -> list[Finding]:
+    """Registration-order fail-fast: first firing rule reports alone."""
+    for rule in _PLAN_REGISTRY.values():
+        if art.kind not in rule.kinds:
+            continue
+        findings = rule.check(art)
+        if findings:
+            return findings
+    return []
+
+
+# ---------------------------------------------------------------------------
+# numpy helpers shared by several rules
+# ---------------------------------------------------------------------------
+
+def _popcount(v: np.ndarray, t: int) -> np.ndarray:
+    v = np.asarray(v, np.int64)
+    return ((v[..., None] >> np.arange(t)) & 1).sum(-1)
+
+
+def _first_bad(mask: np.ndarray) -> tuple[int, ...]:
+    """Index tuple of the first True entry of a boolean mask."""
+    flat = int(np.flatnonzero(np.asarray(mask).reshape(-1))[0])
+    return tuple(int(i) for i in
+                 np.unravel_index(flat, np.asarray(mask).shape))
+
+
+def _idx(name: str, where: tuple[int, ...]) -> str:
+    return f"{name}[{', '.join(map(str, where))}]"
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan rules (host plan IR)
+# ---------------------------------------------------------------------------
+
+class PlanShape(PlanRule):
+    """The plan's arrays agree on one layer signature."""
+    name = "plan-shape"
+    kinds = ("plan",)
+    description = ("rows/signs/steps/direct arrays all match the "
+                   "(t, bits, n, k, groups) signature; k divides into "
+                   "whole tiles and groups into whole tile sets")
+
+    def check(self, art):
+        p = art.plan
+        t, bits = int(p.t), int(p.bits)
+        if t <= 0 or bits <= 0 or p.n <= 0 or p.k <= 0:
+            return [self._finding(
+                art, f"non-positive signature (t={p.t}, bits={p.bits}, "
+                f"n={p.n}, k={p.k})", path="t", field="t")]
+        if p.k % t:
+            return [self._finding(
+                art, f"k={p.k} is not a whole number of t={t} tiles",
+                path="k", field="k")]
+        j = p.k // t
+        if p.groups < 1 or j % p.groups:
+            return [self._finding(
+                art, f"groups={p.groups} does not divide the "
+                f"{j}-tile axis", path="groups", field="groups")]
+        rows = np.asarray(p.rows)
+        if rows.shape != (bits, p.n, j):
+            return [self._finding(
+                art, f"rows shape {rows.shape} != (bits, n, k//t)="
+                f"({bits}, {p.n}, {j})", path="rows", field="rows")]
+        if np.asarray(p.signs).shape != (bits,):
+            return [self._finding(
+                art, f"signs shape {np.asarray(p.signs).shape} != "
+                f"(bits,)=({bits},)", path="signs", field="signs")]
+        d = np.asarray(p.direct_tile).shape
+        if (np.asarray(p.direct_node).shape != d
+                or np.asarray(p.direct_bits).shape != d + (t,)):
+            return [self._finding(
+                art, f"direct arrays disagree: tile{d} node"
+                f"{np.asarray(p.direct_node).shape} bits"
+                f"{np.asarray(p.direct_bits).shape} (want (D,), (D,), "
+                f"(D, {t}))", path="direct_bits", field="direct_bits")]
+        if len(p.steps) > t:
+            return [self._finding(
+                art, f"{len(p.steps)} level steps > t={t} (a node has "
+                f"at most t bits)", path="steps", field="steps")]
+        for i, s in enumerate(p.steps):
+            ln = {np.asarray(a).shape for a in
+                  (s.tile, s.node, s.prefix, s.bit)}
+            if len(ln) != 1 or any(len(sh) != 1 for sh in ln):
+                return [self._finding(
+                    art, f"steps[{i}] edge arrays disagree on length: "
+                    f"{sorted(ln)}", path=f"steps[{i}]", field="steps")]
+        return []
+
+
+class PlanBounds(PlanRule):
+    """Every plan index is inside the structure it addresses."""
+    name = "plan-bounds"
+    kinds = ("plan",)
+    description = ("rows < 2^t, step tiles/nodes/prefixes/bits and "
+                   "direct nodes inside the (J, 2^t, t) index spaces, "
+                   "direct_bits in {0, 1}")
+
+    def check(self, art):
+        p = art.plan
+        t, size, j = int(p.t), 1 << int(p.t), p.k // p.t
+        checks = [("rows", np.asarray(p.rows), 0, size),
+                  ("direct_tile", np.asarray(p.direct_tile), 0, j),
+                  ("direct_node", np.asarray(p.direct_node), 0, size)]
+        for i, s in enumerate(p.steps):
+            checks += [(f"steps[{i}].tile", np.asarray(s.tile), 0, j),
+                       (f"steps[{i}].node", np.asarray(s.node), 0, size),
+                       (f"steps[{i}].prefix", np.asarray(s.prefix), 0,
+                        size),
+                       (f"steps[{i}].bit", np.asarray(s.bit), 0, t)]
+        for name, arr, lo, hi in checks:
+            bad = (arr < lo) | (arr >= hi)
+            if bad.any():
+                w = _first_bad(bad)
+                return [self._finding(
+                    art, f"{int(bad.sum())} value(s) outside [{lo}, "
+                    f"{hi}): first {_idx(name, w)} = "
+                    f"{int(arr[w])}", path=_idx(name, w),
+                    field=name.split("[")[0].split(".")[-1])]
+        db = np.asarray(p.direct_bits)
+        bad = (db != 0) & (db != 1)
+        if bad.any():
+            w = _first_bad(bad)
+            return [self._finding(
+                art, f"direct_bits must be a {{0,1}} mask; first "
+                f"{_idx('direct_bits', w)} = {int(db[w])}",
+                path=_idx("direct_bits", w), field="direct_bits")]
+        return []
+
+
+class PlanDirectPattern(PlanRule):
+    """Direct-dispatch bit masks reconstruct their node values."""
+    name = "plan-direct-pattern"
+    kinds = ("plan",)
+    description = ("each direct node's {0,1} bit mask is the binary "
+                   "decomposition of its node value — direct dispatch "
+                   "computes subset sums straight from the mask")
+
+    def check(self, art):
+        p = art.plan
+        db = np.asarray(p.direct_bits, np.int64)
+        if db.size == 0:
+            return []
+        got = (db << np.arange(p.t)).sum(-1)
+        bad = got != np.asarray(p.direct_node, np.int64)
+        if bad.any():
+            w = _first_bad(bad)
+            return [self._finding(
+                art, f"{int(bad.sum())} direct bit mask(s) do not "
+                f"decompose their node: first direct_bits[{w[0]}] sums "
+                f"to {int(got[w])} but direct_node[{w[0]}] = "
+                f"{int(p.direct_node[w[0]])}",
+                path=f"direct_bits[{w[0]}]", field="direct_bits")]
+        return []
+
+
+class PlanScheduleLevels(PlanRule):
+    """Steps are level-homogeneous with single-bit covering edges."""
+    name = "plan-schedule-levels"
+    kinds = ("plan",)
+    description = ("steps[i] holds exactly the Hamming-level-(i+1) "
+                   "nodes and every edge covers: node ^ prefix is the "
+                   "single bit the step names")
+
+    def check(self, art):
+        p = art.plan
+        for i, s in enumerate(p.steps):
+            node = np.asarray(s.node, np.int64)
+            if node.size == 0:
+                continue
+            lv = _popcount(node, p.t)
+            bad = lv != (i + 1)
+            if bad.any():
+                w = _first_bad(bad)
+                return [self._finding(
+                    art, f"{int(bad.sum())} node(s) in steps[{i}] "
+                    f"(level {i + 1}) at the wrong Hamming level: first "
+                    f"{_idx(f'steps[{i}].node', w)} = {int(node[w])} "
+                    f"(level {int(lv[w])}) — a reordered level executes "
+                    f"before its prefixes exist",
+                    path=_idx(f"steps[{i}].node", w), field="node")]
+            edge = node ^ np.asarray(s.prefix, np.int64)
+            want = np.int64(1) << np.asarray(s.bit, np.int64)
+            bad = edge != want
+            if bad.any():
+                w = _first_bad(bad)
+                return [self._finding(
+                    art, f"{int(bad.sum())} non-covering edge(s) in "
+                    f"steps[{i}]: first {_idx(f'steps[{i}].prefix', w)} "
+                    f"= {int(s.prefix[w])} vs node {int(node[w])} "
+                    f"(xor {int(edge[w])}, declared bit "
+                    f"{int(s.bit[w])})",
+                    path=_idx(f"steps[{i}].prefix", w), field="prefix")]
+        return []
+
+
+class PlanScheduleDag(PlanRule):
+    """The reuse schedule is an acyclic, level-monotone forest."""
+    name = "plan-schedule-dag"
+    kinds = ("plan",)
+    description = ("each (tile, node) is produced at most once, and "
+                   "every level-l edge's prefix was produced strictly "
+                   "earlier (direct dispatch, an earlier level, or the "
+                   "empty node 0)")
+
+    def check(self, art):
+        p = art.plan
+        size = 1 << int(p.t)
+        direct = set(zip(np.asarray(p.direct_tile, np.int64).tolist(),
+                         np.asarray(p.direct_node, np.int64).tolist()))
+        produced: set[tuple[int, int]] = set(direct)
+        if len(direct) != np.asarray(p.direct_tile).size:
+            return [self._finding(
+                art, "duplicate (tile, node) in direct dispatch — a "
+                "node produced twice races its own scatter",
+                path="direct_node", field="direct_node")]
+        earlier = set(produced)      # produced before the current level
+        for i, s in enumerate(p.steps):
+            tiles = np.asarray(s.tile, np.int64).tolist()
+            nodes = np.asarray(s.node, np.int64).tolist()
+            prefixes = np.asarray(s.prefix, np.int64).tolist()
+            here = []
+            for e, (tl, nd, pre) in enumerate(
+                    zip(tiles, nodes, prefixes)):
+                if (tl, nd) in produced:
+                    return [self._finding(
+                        art, f"(tile {tl}, node {nd}) produced twice — "
+                        f"second production at steps[{i}].node[{e}]",
+                        path=f"steps[{i}].node[{e}]", field="node")]
+                if pre != 0 and (tl, pre) not in earlier:
+                    return [self._finding(
+                        art, f"steps[{i}].prefix[{e}] gathers (tile "
+                        f"{tl}, node {pre}) which is not produced at "
+                        f"any earlier level — the schedule is not a "
+                        f"DAG in execution order (a same-level or "
+                        f"later production would read a stale psum "
+                        f"row)", path=f"steps[{i}].prefix[{e}]",
+                        field="prefix")]
+                produced.add((tl, nd))
+                here.append((tl, nd))
+            earlier.update(here)
+        bad = [v for _, v in produced if not 0 <= v < size]
+        del bad  # bounds already guaranteed by plan-bounds (fail-fast)
+        return []
+
+
+# ---------------------------------------------------------------------------
+# DevicePlan rules (compiled gather maps, possibly stacked/padded)
+# ---------------------------------------------------------------------------
+
+def _device_np(device: Any) -> dict[str, np.ndarray]:
+    from repro.core.engine import DEVICE_DATA_FIELDS
+    return {f: np.asarray(getattr(device, f)) for f in DEVICE_DATA_FIELDS}
+
+
+def _device_dims(device: Any) -> tuple[int, int, int, int]:
+    """(t, J, R, K) of a device plan's metadata signature."""
+    t = int(device.t)
+    j = int(device.k) // t
+    return t, j, j * (1 << t), int(device.k)
+
+
+class DeviceShape(PlanRule):
+    """Stack-axis consistency: every leaf agrees on one lead shape."""
+    name = "device-shape"
+    kinds = ("device",)
+    description = ("all DevicePlan leaves share the same leading "
+                   "(stack) axes and their core dims match the "
+                   "(t, bits, n, k, groups) signature — the contract "
+                   "compile_plans/pad_device_plan preserve")
+
+    def check(self, art):
+        d, f = art.device, art.device_np
+        t = int(d.t)
+        if t <= 0 or d.k <= 0 or d.k % t:
+            return [self._finding(
+                art, f"signature k={d.k} is not a whole number of "
+                f"t={t} tiles", path="k", field="k")]
+        tt, j, r, _k = _device_dims(d)
+        if int(d.groups) < 1 or j % int(d.groups):
+            return [self._finding(
+                art, f"groups={d.groups} does not divide the {j}-tile "
+                f"axis", path="groups", field="groups")]
+        ls = f["level_src"]
+        if ls.ndim < 2 or ls.shape[-2:] != (tt, r):
+            return [self._finding(
+                art, f"level_src core shape {ls.shape[-2:] if ls.ndim >= 2 else ls.shape} != (t, J*2^t)="
+                f"({tt}, {r})", path="level_src", field="level_src")]
+        lead = ls.shape[:-2]
+        dwidth = f["direct_idx"].shape[-1] if f["direct_idx"].ndim else 0
+        want = {"level_xsrc": lead + (tt, r),
+                "direct_idx": lead + (dwidth,),
+                "direct_x_idx": lead + (dwidth, tt),
+                "direct_bits": lead + (dwidth, tt),
+                "gather_idx": lead + (int(d.bits), int(d.n), j),
+                "signs": lead + (int(d.bits),)}
+        for name, shape in want.items():
+            if f[name].shape != shape:
+                return [self._finding(
+                    art, f"{name} shape {f[name].shape} != {shape} — "
+                    f"leaves disagree on the stack axes / signature "
+                    f"(lead {lead})", path=name, field=name)]
+        if dwidth < 1:
+            return [self._finding(
+                art, "direct_idx width 0: compile_plan always emits at "
+                "least one (possibly dead) direct lane",
+                path="direct_idx", field="direct_idx")]
+        return []
+
+
+class DeviceBounds(PlanRule):
+    """Every gather/scatter index is inside its table (or the
+    sanctioned one-past-end row)."""
+    name = "device-bounds"
+    kinds = ("device",)
+    description = ("level_src/gather_idx < J*2^t, level_xsrc <= K "
+                   "(K = the pinned zero activation row), direct_idx "
+                   "<= J*2^t (= the dropped pad target), direct_x_idx "
+                   "< K, direct_bits in {0, 1}")
+
+    def check(self, art):
+        d, f = art.device, art.device_np
+        _t, _j, r, k = _device_dims(d)
+        checks = [("level_src", f["level_src"], r),
+                  ("level_xsrc", f["level_xsrc"], k + 1),
+                  ("direct_idx", f["direct_idx"], r + 1),
+                  ("direct_x_idx", f["direct_x_idx"], k),
+                  ("gather_idx", f["gather_idx"], r)]
+        for name, arr, hi in checks:
+            bad = (arr < 0) | (arr >= hi)
+            if bad.any():
+                w = _first_bad(bad)
+                return [self._finding(
+                    art, f"{int(bad.sum())} index value(s) outside "
+                    f"[0, {hi}): first {_idx(name, w)} = "
+                    f"{int(arr[w])} — an out-of-bounds gather clamps "
+                    f"silently on device and corrupts the GEMM",
+                    path=_idx(name, w), field=name)]
+        db = f["direct_bits"]
+        bad = (db != 0) & (db != 1)
+        if bad.any():
+            w = _first_bad(bad)
+            return [self._finding(
+                art, f"direct_bits must be a {{0,1}} mask; first "
+                f"{_idx('direct_bits', w)} = {int(db[w])}",
+                path=_idx("direct_bits", w), field="direct_bits")]
+        return []
+
+
+class DeviceIdentityLanes(PlanRule):
+    """Identity lanes gather themselves plus exactly the zero row."""
+    name = "device-identity-lanes"
+    kinds = ("device",)
+    description = ("level_src[l, r] == r iff level_xsrc[l, r] == K: a "
+                   "self-gather adding a real activation row double-"
+                   "counts it; a cross-gather adding the zero row "
+                   "overwrites a psum with a copy")
+
+    def check(self, art):
+        d, f = art.device, art.device_np
+        t, _j, r, k = _device_dims(d)
+        ls = f["level_src"].reshape(-1, t, r)
+        lx = f["level_xsrc"].reshape(-1, t, r)
+        rid = np.arange(r, dtype=ls.dtype)
+        identity = ls == rid[None, None, :]
+        zero = lx == k
+        bad = identity != zero
+        if bad.any():
+            s, lv, row = _first_bad(bad)
+            kind = ("identity lane adds real activation row "
+                    f"{int(lx[s, lv, row])}" if identity[s, lv, row]
+                    else f"executed lane (src {int(ls[s, lv, row])}) "
+                    f"adds the pinned zero row")
+            where = ((s, lv, row) if f["level_src"].ndim > 2
+                     else (lv, row))
+            return [self._finding(
+                art, f"{int(bad.sum())} lane(s) break the identity "
+                f"contract: first {_idx('level_xsrc', where)} — {kind}",
+                path=_idx("level_xsrc", where), field="level_xsrc")]
+        return []
+
+
+class DeviceLevelMonotone(PlanRule):
+    """The gather schedule is acyclic: sources settle strictly
+    earlier."""
+    name = "device-level-monotone"
+    kinds = ("device",)
+    description = ("each psum row is executed at most once across the "
+                   "level maps, and an executed row's source row is "
+                   "never executed at the same or a later level — the "
+                   "device-side statement of DAG acyclicity")
+
+    def check(self, art):
+        d, f = art.device, art.device_np
+        t, _j, r, _k = _device_dims(d)
+        stacked = f["level_src"].ndim > 2
+        ls_all = f["level_src"].reshape(-1, t, r)
+        rid = np.arange(r, dtype=ls_all.dtype)
+        for s in range(ls_all.shape[0]):
+            ls = ls_all[s]
+            execd = ls != rid[None, :]
+            times = execd.sum(0)
+            if (times > 1).any():
+                row = int(np.flatnonzero(times > 1)[0])
+                lvls = np.flatnonzero(execd[:, row]).tolist()
+                where = ((s, lvls[1], row) if stacked
+                         else (lvls[1], row))
+                return [self._finding(
+                    art, f"psum row {row} is executed at "
+                    f"{int(times[row])} levels {lvls} — a node is "
+                    f"computed once; the later execution overwrites it",
+                    path=_idx("level_src", where), field="level_src")]
+            exec_level = np.where(execd.any(0), execd.argmax(0), -1)
+            lv_i, row_i = np.nonzero(execd)
+            src = ls[lv_i, row_i]
+            bad = exec_level[src] >= lv_i
+            if bad.any():
+                b = int(np.flatnonzero(bad)[0])
+                lv, row = int(lv_i[b]), int(row_i[b])
+                where = (s, lv, row) if stacked else (lv, row)
+                return [self._finding(
+                    art, f"{int(bad.sum())} edge(s) violate level "
+                    f"monotonicity: first {_idx('level_src', where)} "
+                    f"gathers row {int(src[b])}, which is itself "
+                    f"executed at level {int(exec_level[src[b]])} (>= "
+                    f"{lv}) — a cycle or reordered level in the reuse "
+                    f"graph reads an unsettled psum",
+                    path=_idx("level_src", where), field="level_src")]
+        return []
+
+
+class DeviceDirectDispatch(PlanRule):
+    """Pad lanes are provably dead; live lanes are one-writer."""
+    name = "device-direct-dispatch"
+    kinds = ("device",)
+    description = ("pad lanes (target J*2^t) carry all-zero bit masks "
+                   "(the pad_device_plan contract), live targets are "
+                   "unique, and no live target is also level-executed")
+
+    def check(self, art):
+        d, f = art.device, art.device_np
+        t, _j, r, _k = _device_dims(d)
+        stacked = f["direct_idx"].ndim > 1
+        di_all = f["direct_idx"].reshape(-1, f["direct_idx"].shape[-1])
+        db_all = f["direct_bits"].reshape(-1,
+                                          f["direct_bits"].shape[-2], t)
+        ls_all = f["level_src"].reshape(-1, t, r)
+        rid = np.arange(r)
+        for s in range(di_all.shape[0]):
+            di, db = di_all[s], db_all[s]
+            pad = di == r
+            live_bits = db.any(-1)
+            bad = pad & live_bits
+            if bad.any():
+                lane = int(np.flatnonzero(bad)[0])
+                bit = int(np.flatnonzero(db[lane])[0])
+                where = (s, lane, bit) if stacked else (lane, bit)
+                return [self._finding(
+                    art, f"{int(bad.sum())} pad lane(s) are not dead: "
+                    f"first {_idx('direct_bits', where)} = "
+                    f"{int(db[lane, bit])} on a lane whose scatter "
+                    f"target is the dropped row {r} — pad lanes must "
+                    f"be bit-exact no-ops (pad_device_plan contract) "
+                    f"or a hot-swap pad changes the GEMM",
+                    path=_idx("direct_bits", where),
+                    field="direct_bits")]
+            live = di[~pad]
+            if live.size != np.unique(live).size:
+                vals, counts = np.unique(live, return_counts=True)
+                dup = int(vals[counts > 1][0])
+                lane = int(np.flatnonzero(di == dup)[1])
+                where = (s, lane) if stacked else (lane,)
+                return [self._finding(
+                    art, f"direct target row {dup} is scattered by "
+                    f"multiple lanes — last-writer-wins makes the "
+                    f"psum nondeterministic",
+                    path=_idx("direct_idx", where), field="direct_idx")]
+            execd_rows = rid[(ls_all[s] != rid[None, :]).any(0)]
+            clash = np.isin(live, execd_rows)
+            if clash.any():
+                lane = int(np.flatnonzero(~pad)[np.flatnonzero(clash)[0]])
+                where = (s, lane) if stacked else (lane,)
+                return [self._finding(
+                    art, f"direct target row {int(di[lane])} is also "
+                    f"executed by the level maps — the node would be "
+                    f"computed twice",
+                    path=_idx("direct_idx", where), field="direct_idx")]
+        return []
+
+
+class PlanDeviceAgreement(PlanRule):
+    """The device lowering is exactly what the host plan compiles to."""
+    name = "plan-device-agreement"
+    kinds = ("device",)
+    description = ("when the host plan is available and the device "
+                   "plan is unstacked, recompiling the plan (at the "
+                   "observed direct pad) reproduces every leaf bit-"
+                   "exactly — catches content corruption that is "
+                   "individually well-formed")
+
+    def check(self, art):
+        if art.plan is None:
+            return []
+        f = art.device_np
+        if f["level_src"].ndim != 2:
+            return []                 # stacked: per-slice plans unknown
+        from repro.core.engine import (DEVICE_DATA_FIELDS, compile_plan,
+                                       pad_device_plan)
+        want = compile_plan(art.plan)
+        pad = f["direct_idx"].shape[-1]
+        if pad > want.direct_idx.shape[-1]:
+            want = pad_device_plan(want, pad)
+        for name in DEVICE_DATA_FIELDS:
+            exp = np.asarray(getattr(want, name))
+            got = f[name]
+            if exp.shape != got.shape or not np.array_equal(exp, got):
+                bad = (exp != got if exp.shape == got.shape
+                       else np.ones(1, bool))
+                w = (_first_bad(bad) if exp.shape == got.shape else ())
+                return [self._finding(
+                    art, f"{name} does not match the host plan's "
+                    f"compilation"
+                    + (f": first divergence at {_idx(name, w)} "
+                       f"(got {int(got[w])}, plan compiles to "
+                       f"{int(exp[w])})" if w else
+                       f" (shape {got.shape} vs {exp.shape})"),
+                    path=_idx(name, w) if w else name, field=name)]
+        return []
+
+
+# ---------------------------------------------------------------------------
+# Bundle rules (fleet manifest + persisted npz files)
+# ---------------------------------------------------------------------------
+
+class BundleManifest(PlanRule):
+    """The fleet manifest is internally coherent before any file is
+    trusted."""
+    name = "bundle-manifest"
+    kinds = ("manifest",)
+    description = ("manifest.json carries the format/backend/"
+                   "engine_config/fingerprint keys, layer leads match "
+                   "their file lists (unique in-bounds index tuples), "
+                   "and every referenced file exists")
+
+    _REQUIRED = ("format", "backend", "engine_config",
+                 "weights_fingerprint", "n_layers", "n_files", "layers")
+
+    def check(self, art):
+        m = art.manifest
+        if not isinstance(m, dict):
+            return [self._finding(
+                art, f"manifest is {type(m).__name__}, not a dict",
+                path="manifest", field="manifest")]
+        missing = [k for k in self._REQUIRED if k not in m]
+        if missing:
+            return [self._finding(
+                art, f"manifest is missing key(s) {missing}",
+                path=missing[0], field=missing[0])]
+        ec = m["engine_config"]
+        if not isinstance(ec, dict) or not {"w_bits", "t"} <= set(ec):
+            return [self._finding(
+                art, f"engine_config {ec!r} lacks w_bits/t",
+                path="engine_config", field="engine_config")]
+        layers = m["layers"]
+        if not isinstance(layers, dict):
+            return [self._finding(
+                art, f"layers is {type(layers).__name__}, not a dict",
+                path="layers", field="layers")]
+        if m["n_layers"] != len(layers):
+            return [self._finding(
+                art, f"n_layers={m['n_layers']} but the manifest "
+                f"carries {len(layers)} layer(s)", path="n_layers",
+                field="n_layers")]
+        n_files = 0
+        for lpath, meta in layers.items():
+            where = f"layers[{lpath!r}]"
+            for key in ("lead", "groups", "files"):
+                if key not in meta:
+                    return [self._finding(
+                        art, f"{where} is missing '{key}'",
+                        path=f"{where}.{key}", field=key)]
+            lead = tuple(int(v) for v in meta["lead"])
+            n_slices = int(np.prod(lead)) if lead else 1
+            files = meta["files"]
+            if len(files) != n_slices:
+                return [self._finding(
+                    art, f"{where} lead {list(lead)} implies "
+                    f"{n_slices} slice file(s), manifest lists "
+                    f"{len(files)}", path=f"{where}.files",
+                    field="files")]
+            seen: set[tuple[int, ...]] = set()
+            for fi, e in enumerate(files):
+                fwhere = f"{where}.files[{fi}]"
+                miss = [k for k in ("file", "index", "sha256")
+                        if k not in e]
+                if miss:
+                    return [self._finding(
+                        art, f"{fwhere} is missing {miss}",
+                        path=f"{fwhere}.{miss[0]}", field=miss[0])]
+                idx = tuple(int(v) for v in e["index"])
+                if len(idx) != len(lead) or any(
+                        not 0 <= v < b for v, b in zip(idx, lead)):
+                    return [self._finding(
+                        art, f"{fwhere}.index {list(idx)} is outside "
+                        f"lead {list(lead)}", path=f"{fwhere}.index",
+                        field="index")]
+                if idx in seen:
+                    return [self._finding(
+                        art, f"{fwhere}.index {list(idx)} repeats an "
+                        f"earlier slice", path=f"{fwhere}.index",
+                        field="index")]
+                seen.add(idx)
+                if art.bundle_dir is not None and not os.path.exists(
+                        os.path.join(art.bundle_dir, str(e["file"]))):
+                    return [self._finding(
+                        art, f"{fwhere}.file {e['file']!r} does not "
+                        f"exist in {art.bundle_dir}",
+                        path=f"{fwhere}.file", field="file")]
+                n_files += 1
+        if m["n_files"] != n_files:
+            return [self._finding(
+                art, f"n_files={m['n_files']} but the layer tables "
+                f"list {n_files} file(s)", path="n_files",
+                field="n_files")]
+        return []
+
+
+for _r in (PlanShape(), PlanBounds(), PlanDirectPattern(),
+           PlanScheduleLevels(), PlanScheduleDag(), DeviceShape(),
+           DeviceBounds(), DeviceIdentityLanes(), DeviceLevelMonotone(),
+           DeviceDirectDispatch(), PlanDeviceAgreement(),
+           BundleManifest()):
+    register_plan_rule(_r)
+del _r
+
+
+# ---------------------------------------------------------------------------
+# Verification entry points
+# ---------------------------------------------------------------------------
+
+def verify_plan(plan: Any, *, backend: str | None = None,
+                name: str = "plan") -> list[Finding]:
+    """Run the ExecutionPlan rules; returns the (fail-fast) findings."""
+    return _run(PlanArtifact(kind="plan", name=name, backend=backend,
+                             plan=plan))
+
+
+def verify_device_plan(device: Any, plan: Any = None, *,
+                       backend: str | None = None,
+                       name: str = "device-plan") -> list[Finding]:
+    """Run the DevicePlan rules (plus plan↔device agreement when the
+    host plan is supplied). Leaves are pulled to host numpy once;
+    sharded leaves are gathered (lint-sized plans only)."""
+    return _run(PlanArtifact(kind="device", name=name, backend=backend,
+                             plan=plan, device=device,
+                             device_np=_device_np(device)))
+
+
+def verify_manifest(manifest: Any, *, bundle_dir: str | None = None,
+                    backend: str | None = None,
+                    name: str = "bundle-manifest") -> list[Finding]:
+    """Run the manifest-coherence rules over a fleet bundle manifest."""
+    return _run(PlanArtifact(kind="manifest", name=name, backend=backend,
+                             manifest=manifest, bundle_dir=bundle_dir))
+
+
+def verify_bundle_file(path: str | os.PathLike, *,
+                       backend: str | None = None) -> list[Finding]:
+    """Structurally verify one persisted plan bundle ``.npz``.
+
+    Parses the file (an unreadable/truncated npz is itself a finding —
+    this runs *before* any hash check at the bundle-load gate), then
+    runs the plan rules on the stored ExecutionPlan and, when the file
+    carries a device lowering, the device rules plus plan↔device
+    agreement against the stored plan.
+    """
+    name = os.path.basename(str(path))
+    try:
+        from repro.core.engine import ExecutionPlan
+        bundle = ExecutionPlan.load_bundle(path)
+    except Exception as e:                      # noqa: BLE001 — any parse
+        return [Finding(
+            rule="bundle-file", severity="error", program=name,
+            backend=backend, path=str(path), primitive="npz",
+            message=f"bundle file is unreadable as a plan npz "
+            f"({type(e).__name__}: {e}) — truncated or corrupt "
+            f"artifact refused before any hash comparison")]
+    findings = verify_plan(bundle.plan, backend=backend, name=name)
+    if not findings and bundle.device is not None:
+        findings = verify_device_plan(bundle.device, bundle.plan,
+                                      backend=backend, name=name)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Gates (the raising twins — wired at the trust boundaries)
+# ---------------------------------------------------------------------------
+
+def _require(findings: list[Finding], where: str) -> None:
+    if findings:
+        raise PlanVerificationError(findings, where)
+
+
+def gate_plan(plan: Any, *, where: str,
+              backend: str | None = None) -> None:
+    """Raise :class:`PlanVerificationError` unless ``plan`` verifies."""
+    if enabled():
+        _require(verify_plan(plan, backend=backend), where)
+
+
+def gate_device(device: Any, plan: Any = None, *, where: str,
+                backend: str | None = None) -> None:
+    """Raise unless the compiled ``device`` plan verifies.
+
+    ``TransitiveBackend.compile`` may return any payload; only the
+    canonical ``DevicePlan`` lowering is verifiable here, so other
+    payloads pass through unexamined (their backend owns their format).
+    """
+    if not enabled():
+        return
+    from repro.core.engine import DevicePlan
+    if not isinstance(device, DevicePlan):
+        return
+    import jax
+    if any(isinstance(leaf, jax.core.Tracer)
+           for leaf in jax.tree_util.tree_leaves(device)):
+        # compiled inside a trace (plan resolution at trace time):
+        # leaves are symbolic, so there is nothing to read — the host
+        # plan already passed the publish gate on concrete arrays
+        return
+    _require(verify_device_plan(device, plan, backend=backend), where)
+
+
+def gate_manifest(manifest: Any, *, where: str,
+                  bundle_dir: str | None = None,
+                  backend: str | None = None) -> None:
+    """Raise unless the bundle manifest is coherent."""
+    if enabled():
+        _require(verify_manifest(manifest, bundle_dir=bundle_dir,
+                                 backend=backend), where)
+
+
+def gate_bundle_file(path: Any, *, where: str,
+                     backend: str | None = None) -> None:
+    """Raise unless the persisted bundle file verifies structurally.
+
+    Deliberately runs *before* any sha256 comparison at the load
+    boundary: a truncated or hand-edited npz is refused on structure,
+    so the integrity check never has to parse attacker-shaped bytes."""
+    if enabled():
+        _require(verify_bundle_file(path, backend=backend), where)
+
+
+def iter_device_plans(tree: Any, path: tuple = ()
+                      ) -> Iterator[tuple[str, Any]]:
+    """Yield ``("a/b/dplan", DevicePlan)`` for every device plan
+    embedded in a params pytree (dict/list/tuple walk — DevicePlan is a
+    registered pytree, so ``jax.tree`` flattening would dissolve it)."""
+    from repro.core.engine import DevicePlan
+    if isinstance(tree, DevicePlan):
+        yield "/".join(map(str, path)) or "dplan", tree
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from iter_device_plans(v, path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_device_plans(v, path + (i,))
+
+
+def gate_params(params: Any, *, where: str) -> None:
+    """Verify every DevicePlan embedded in a params pytree (the
+    swap-staging gate: a hot-swap generation's plans are checked before
+    they can be staged)."""
+    if not enabled():
+        return
+    for label, dplan in iter_device_plans(params):
+        findings = verify_device_plan(dplan, name=label)
+        _require(findings, where)
+
+
+# ---------------------------------------------------------------------------
+# The --plans lint driver (CLI half; see analysis/lint.py)
+# ---------------------------------------------------------------------------
+
+def lint_plans(backend_names: list[str], *, mesh: Any = None
+               ) -> tuple[list[dict], list[Finding]]:
+    """Build representative plan artifacts per backend and verify them.
+
+    Per planned backend: an ungrouped plan, a grouped plan, a stacked
+    pair (``compile_plans``), a padded device plan, and a full
+    save→``verify_bundle_file`` npz round trip (with the device
+    lowering and weight fingerprint riding along). Device-resident
+    backends verify their own ``compile`` hook's output; under a mesh
+    the device plan is sharded first, so the verifier reads the same
+    distributed leaves the serve path would. Returns (report rows,
+    findings) — zero findings on a healthy tree.
+    """
+    from repro.core.backend import get_backend, shard_device_plan
+    from repro.core.engine import (BatchedTransitiveEngine, compile_plans,
+                                   pad_device_plan)
+    from repro.core.plancache import weight_fingerprint
+
+    report, all_findings = [], []
+    rng = np.random.default_rng(7)
+    for name in backend_names:
+        b = get_backend(name)
+        row = {"backend": name, "artifacts": [], "findings": []}
+        if not b.needs_plan:
+            row["skipped"] = "backend plans nothing (needs_plan=False)"
+            report.append(row)
+            continue
+        eng = BatchedTransitiveEngine(bits=8, t=4)
+        w = rng.integers(-128, 128, (16, 32)).astype(np.int64)
+        w2 = rng.integers(-128, 128, (16, 32)).astype(np.int64)
+        plan = eng.plan(w)
+        grouped = eng.plan(w, groups=2)
+        findings = []
+        artifacts = [("plan", lambda: verify_plan(plan, backend=name)),
+                     ("plan-grouped",
+                      lambda: verify_plan(grouped, backend=name))]
+        device = None
+        if b.device_resident:
+            device = b.compile(plan)
+            if mesh is not None:
+                device = shard_device_plan(device, mesh)
+            stacked = compile_plans([plan, eng.plan(w2)])
+            padded = pad_device_plan(
+                device, int(np.asarray(device.direct_idx).shape[-1]) + 3)
+            artifacts += [
+                ("device", lambda: verify_device_plan(
+                    device, plan, backend=name)),
+                ("device-stacked", lambda: verify_device_plan(
+                    stacked, backend=name, name="device-stacked")),
+                ("device-padded", lambda: verify_device_plan(
+                    padded, backend=name, name="device-padded")),
+            ]
+
+        def _roundtrip() -> list[Finding]:
+            with tempfile.TemporaryDirectory() as td:
+                p = os.path.join(td, "layer.npz")
+                plan.save(p, device=device,
+                          backend=name if device is not None else None,
+                          fingerprint=weight_fingerprint(w))
+                return verify_bundle_file(p, backend=name)
+
+        artifacts.append(("bundle-roundtrip", _roundtrip))
+        for label, fn in artifacts:
+            fs = fn()
+            findings.extend(fs)
+            row["artifacts"].append(label)
+        row["findings"] = [f.to_json() for f in findings]
+        all_findings.extend(findings)
+        report.append(row)
+    return report, all_findings

@@ -66,8 +66,13 @@ def subjaxprs(eqn) -> Iterator[tuple[str, core.Jaxpr]]:
 
     ``while`` keeps its two jaxprs under ``cond_jaxpr``/``body_jaxpr``;
     ``cond`` keeps a tuple under ``branches``; most call-likes keep one
-    under ``jaxpr``/``call_jaxpr``. Rather than enumerate primitives, look
-    at the values: anything that *is* a jaxpr gets walked.
+    under ``jaxpr``/``call_jaxpr``. The custom-derivative wrappers are
+    covered the same way — ``custom_jvp_call`` carries its primal under
+    ``call_jaxpr`` and ``custom_vjp_call``/``custom_vjp_call_jaxpr``
+    under ``fun_jaxpr``, so a callback or scatter cannot hide behind a
+    ``jax.custom_jvp``/``jax.custom_vjp`` decorator (positive controls in
+    tests/test_analysis.py). Rather than enumerate primitives, look at
+    the values: anything that *is* a jaxpr gets walked.
     """
     for key, val in eqn.params.items():
         vals = val if isinstance(val, (tuple, list)) else (val,)

@@ -251,6 +251,11 @@ class PlanCache:
                 qw = _canonical(qw)        # build path only
             plan = BatchedTransitiveEngine(bits=cfg.w_bits, t=cfg.t).plan(
                 qw.astype(np.int64, copy=False), groups=cfg.groups)
+            # trust boundary: nothing malformed is ever published to
+            # readers (a failed verification propagates like a failed
+            # build — waiters retry, nothing is cached)
+            from repro.analysis.planlint import gate_plan
+            gate_plan(plan, where="cache-publish")
             # content hash stored regardless of key scheme: invalidate()
             # finds version-keyed entries by weight content too
             entry = _Entry(plan=plan,
@@ -335,6 +340,11 @@ class PlanCache:
             # transfer must not block concurrent hot-path lookups.
             # Double-checked: a racing compile keeps the first pytree.
             device = bk.compile(entry.plan)
+            # second half of the publish gate: the lowering must agree
+            # with the (already-verified) plan before any reader sees it
+            from repro.analysis.planlint import gate_device
+            gate_device(device, plan=entry.plan, backend=tag,
+                        where="cache-lowering")
             with self._lock:
                 entry.device.setdefault(memo_key, device)
         return entry.device[memo_key]

@@ -172,6 +172,11 @@ def load_bundles(params: Any, cfg: Any, bundle_dir, *,
     b = _cfg_backend(cfg, None)
     if b is None:
         b = get_backend("engine_jit")
+    # trust boundary: structural coherence before any semantic checks —
+    # a malformed manifest never reaches the mismatch logic below
+    from repro.analysis.planlint import gate_bundle_file, gate_manifest
+    gate_manifest(manifest, where="bundle-load", bundle_dir=bundle_dir,
+                  backend=b.name)
     w_bits, t = _plan_knobs(cfg)
     mcfg = manifest.get("engine_config", {})
     if not force:
@@ -222,6 +227,10 @@ def load_bundles(params: Any, cfg: Any, bundle_dir, *,
         devices = []
         for e in meta["files"]:
             fpath = os.path.join(bundle_dir, e["file"])
+            # structural verification FIRST: a truncated/corrupted npz
+            # is refused by planlint before the hash is even computed
+            gate_bundle_file(fpath, where="bundle-load",
+                             backend=b.name)
             if _sha256(fpath) != e["sha256"]:
                 raise BundleMismatchError(
                     f"{fpath}: file hash mismatch — bundle corrupted "

@@ -41,8 +41,9 @@ alone through the one-shot path.
 
 ``--lint`` runs the tracelint preflight (``repro.analysis``) over the
 selected backend's serving programs under the selected mesh before any
-weight is initialised, and refuses to serve on any error finding — the
-same gate CI runs, one flag away at launch time.
+weight is initialised — plus the plan-IR verifier (``planlint``) over
+the backend's plan artifacts — and refuses to serve on any error
+finding: the same gate CI runs, one flag away at launch time.
 
 Fleet flags (docs/FLEET.md):
 
@@ -342,6 +343,11 @@ def main():
         _, findings = lint_backend(name, mesh=mesh, arch=args.arch,
                                    batch=args.batch,
                                    w_bits=args.w_bits)
+        # plan-IR half of the preflight: the same verifier that gates
+        # cache publish / bundle load / swap staging, run proactively
+        from repro.analysis.planlint import lint_plans
+        _, pfindings = lint_plans([name], mesh=mesh)
+        findings = list(findings) + list(pfindings)
         errors = [f for f in findings if f.severity == "error"]
         for f in findings:
             print(f"[tracelint] {f.format()}")

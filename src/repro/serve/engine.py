@@ -354,6 +354,11 @@ class ServeEngine:
                 "the serving generation's — a hot swap replaces weight "
                 "values, not model architecture (build a new engine for "
                 "that)")
+        # trust boundary: a replan worker's DevicePlans are verified at
+        # staging time — a malformed plan never waits in _staged where
+        # the scheduling thread would attach it mid-serve
+        from repro.analysis.planlint import gate_params
+        gate_params(params, where="swap-staging")
         drift = sum(
             getattr(a, "shape", None) != getattr(b, "shape", None)
             or getattr(a, "dtype", None) != getattr(b, "dtype", None)

@@ -364,3 +364,95 @@ def test_lint_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for name in R.list_rules():
         assert name in out
+
+
+# -- ISSUE 10 satellites: custom-derivative recursion + baseline pruning -----
+
+def test_control_callback_found_under_custom_jvp():
+    """A pure_callback cannot hide behind jax.custom_jvp: the walker
+    enters the primal call_jaxpr of custom_jvp_call."""
+    @jax.custom_jvp
+    def f(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct((4,), jnp.float32), x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        return f(x), jnp.cos(x) * dx
+
+    found = analysis.find_violations(
+        lambda x: f(x) * 2.0, jnp.ones((4,), jnp.float32),
+        rules=("no-host-callback",))
+    assert found and found[0].primitive == "pure_callback"
+    assert "custom_jvp_call" in found[0].path
+
+
+def test_control_callback_found_under_custom_vjp():
+    @jax.custom_vjp
+    def f(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct((4,), jnp.float32), x)
+
+    f.defvjp(lambda x: (f(x), x), lambda res, g: (g * jnp.cos(res),))
+
+    found = analysis.find_violations(
+        lambda x: f(x) + 1.0, jnp.ones((4,), jnp.float32),
+        rules=("no-host-callback",))
+    assert found and found[0].primitive == "pure_callback"
+    assert "custom_vjp_call" in found[0].path
+
+
+def test_baseline_stale_keys_and_prune():
+    from repro.analysis.baseline import stale_keys
+
+    def dirty(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct((4,), jnp.float32), x)
+    found = analysis.find_violations(dirty, jnp.ones((4,), jnp.float32))
+    live = found[0].key()
+    dead = "no-host-callback::engine::retired-program::pure_callback"
+    assert stale_keys({live, dead}, found) == [dead]
+    assert stale_keys({live}, found) == []
+    assert stale_keys(set(), found) == []
+
+
+def test_lint_cli_prune_baseline(tmp_path, capsys):
+    """`lint --prune-baseline` reports stale allowlist entries and, with
+    --write-baseline, rewrites the file without them."""
+    from repro.analysis.lint import main
+    dead = "no-host-callback::int_dot::retired-program::pure_callback"
+    p = tmp_path / "baseline.txt"
+    p.write_text(dead + "\n")
+    rc = main(["--backend", "int_dot", "--batch", "2",
+               "--baseline", str(p), "--prune-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert f"stale: {dead}" in out and "1 stale entry" in out
+    rc = main(["--backend", "int_dot", "--batch", "2",
+               "--baseline", str(p), "--prune-baseline",
+               "--write-baseline", str(p)])
+    assert rc == 0
+    assert dead not in p.read_text()
+
+
+def test_lint_cli_plans_and_budgets_sections(tmp_path, capsys):
+    """--plans/--budgets merge into the findings stream and the JSON
+    report gains their sections."""
+    import json as _json
+
+    from repro.analysis.lint import main
+    from repro.core.plancache import PlanCache, set_default_cache
+    prev = set_default_cache(PlanCache(capacity=64))
+    try:
+        out_json = tmp_path / "lint.json"
+        rc = main(["--backend", "engine_jit", "--plans", "--budgets",
+                   "--json", str(out_json)])
+    finally:
+        set_default_cache(prev)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "[planlint]" in out and "[costcheck]" in out
+    doc = _json.loads(out_json.read_text())
+    assert doc["plans"] and doc["plans"][0]["backend"] == "engine_jit"
+    assert any(r.get("ok") for r in doc["budgets"])

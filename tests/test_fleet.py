@@ -424,9 +424,14 @@ def test_bundles_corruption_refused_even_forced(cache, jit_cell, tmp_path):
     blob = bytearray(open(path, "rb").read())
     blob[len(blob) // 2] ^= 0xFF
     open(path, "wb").write(bytes(blob))
-    with pytest.raises(BundleMismatchError, match="hash mismatch"):
+    # corrupted bytes are refused STRUCTURALLY (planlint) before the
+    # sha256 even runs; a flip that survives parsing still dies on the
+    # hash — either way, force= does not bypass damaged bytes
+    from repro.analysis.planlint import PlanVerificationError
+    refused = (BundleMismatchError, PlanVerificationError)
+    with pytest.raises(refused, match="hash mismatch|refused|planlint"):
         load_bundles(raw0, cfg.quant, bdir)
-    with pytest.raises(BundleMismatchError, match="hash mismatch"):
+    with pytest.raises(refused, match="hash mismatch|refused|planlint"):
         load_bundles(raw0, cfg.quant, bdir, force=True)
 
 

@@ -1,0 +1,506 @@
+"""Plan-IR verifier + static cost certifier (ISSUE 10).
+
+Three layers of evidence:
+
+* a **mutation corpus**: ~10 seeded corruptions of a valid plan — cycle
+  spliced into the reuse graph, OOB gather index, reordered level,
+  non-dead pad lane, truncated bundle npz, ... — each caught with
+  exactly ONE error finding whose path names the corrupted field;
+* **gate attribution**: each corruption class is refused at the right
+  trust boundary (PlanCache publish / bundle load *before* the sha256
+  check / swap staging);
+* **budgets**: the live-page decode and swap-trace-count budgets pass
+  on the healthy paths and demonstrably fail when hand-broken.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis import costcheck, planlint
+from repro.analysis.planlint import (PlanVerificationError,
+                                     list_plan_rules, verify_bundle_file,
+                                     verify_device_plan, verify_manifest,
+                                     verify_plan)
+from repro.core.backend import EngineConfig, get_backend
+from repro.core.engine import (BatchedTransitiveEngine, LevelStep,
+                               pad_device_plan)
+from repro.core.plancache import (PlanCache, set_default_cache,
+                                  weight_fingerprint)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    w = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(0), (8, 16), -8, 8))
+    return BatchedTransitiveEngine(bits=4, t=4).plan(w)
+
+
+@pytest.fixture(scope="module")
+def dev(plan):
+    return get_backend("engine_jit").compile(plan)
+
+
+@pytest.fixture()
+def cache():
+    c = PlanCache(capacity=32)
+    prev = set_default_cache(c)
+    yield c
+    set_default_cache(prev)
+
+
+def _one(findings, rule, field_sub):
+    """The corpus contract: exactly one error finding, right rule, and
+    a path that names the corrupted field."""
+    assert len(findings) == 1, [f.format() for f in findings]
+    f = findings[0]
+    assert f.severity == "error", f.format()
+    assert f.rule == rule, f.format()
+    assert field_sub in f.path, f.format()
+    return f
+
+
+def _mut_step(plan, i, **arrays):
+    """Replace selected arrays of ``plan.steps[i]``."""
+    s = plan.steps[i]
+    new = LevelStep(**{k: arrays.get(k, getattr(s, k))
+                       for k in ("tile", "node", "prefix", "bit")})
+    steps = plan.steps[:i] + (new,) + plan.steps[i + 1:]
+    return dataclasses.replace(plan, steps=steps)
+
+
+def _np(x):
+    return np.array(x, dtype=np.int64)
+
+
+# -- the healthy artifacts verify clean --------------------------------------
+
+def test_clean_plan_and_device(plan, dev):
+    assert verify_plan(plan) == []
+    assert verify_device_plan(dev, plan) == []
+
+
+def test_clean_padded_and_stacked(plan, dev):
+    from repro.core.engine import compile_plans
+    d = int(np.asarray(dev.direct_idx).shape[-1])
+    assert verify_device_plan(pad_device_plan(dev, d + 3), plan) == []
+    assert verify_device_plan(compile_plans([plan, plan])) == []
+
+
+# -- mutation corpus: plan IR ------------------------------------------------
+
+def test_mut_cycle_spliced_into_reuse_graph(plan):
+    """A level-1 edge whose prefix is a LATER-level node: still a
+    covering single-bit edge (so the shallow rules pass), but the
+    schedule is no longer a DAG in execution order."""
+    s = plan.steps[0]
+    nd = int(s.node[0])
+    b = next(bb for bb in range(plan.t) if not (nd >> bb) & 1)
+    prefix = _np(s.prefix); prefix[0] = nd | (1 << b)
+    bit = _np(s.bit); bit[0] = b
+    bad = _mut_step(plan, 0, prefix=prefix, bit=bit)
+    f = _one(verify_plan(bad), "plan-schedule-dag", "steps[0].prefix[0]")
+    assert "not produced at any earlier level" in f.message
+
+
+def test_mut_reordered_level(plan):
+    """Swapping two levels executes level-2 nodes in the level-1 slot."""
+    swapped = dataclasses.replace(
+        plan, steps=(plan.steps[1], plan.steps[0]) + plan.steps[2:])
+    _one(verify_plan(swapped), "plan-schedule-levels", "steps[0].node")
+
+
+def test_mut_duplicate_production(plan):
+    s = plan.steps[1]
+    arrays = {k: _np(getattr(s, k))
+              for k in ("tile", "node", "prefix", "bit")}
+    for a in arrays.values():      # edge 1 := copy of edge 0
+        a[1] = a[0]
+    bad = _mut_step(plan, 1, **arrays)
+    _one(verify_plan(bad), "plan-schedule-dag", "steps[1].node[1]")
+
+
+def test_mut_oob_step_node(plan):
+    node = _np(plan.steps[0].node)
+    node[0] = 1 << plan.t                  # one past the tile table
+    bad = _mut_step(plan, 0, node=node)
+    _one(verify_plan(bad), "plan-bounds", "node")
+
+
+def test_mut_oob_rows(plan):
+    rows = _np(plan.rows)
+    rows[0, 0, 0] = 1 << plan.t
+    bad = dataclasses.replace(plan, rows=rows)
+    _one(verify_plan(bad), "plan-bounds", "rows[0, 0, 0]")
+
+
+def test_mut_groups_mismatch(plan):
+    bad = dataclasses.replace(plan, groups=3)   # J=4 tiles: 3 ∤ 4
+    _one(verify_plan(bad), "plan-shape", "groups")
+
+
+# -- mutation corpus: device plan --------------------------------------------
+
+def test_mut_oob_gather_index(plan, dev):
+    gi = _np(dev.gather_idx)
+    r = plan.n_tiles << plan.t
+    gi[0, 0, 0] = r                        # one past the psum table
+    bad = dataclasses.replace(dev, gather_idx=gi)
+    f = _one(verify_device_plan(bad, plan), "device-bounds",
+             "gather_idx[0, 0, 0]")
+    assert str(r) in f.message
+
+
+def test_mut_identity_lane_reads_real_row(plan, dev):
+    ls, lx = _np(dev.level_src), _np(dev.level_xsrc)
+    r = np.arange(ls.shape[-1])
+    lv, row = np.argwhere(ls == r[None, :])[0]   # an identity lane
+    lx[lv, row] = 0                       # now adds a real activation
+    bad = dataclasses.replace(dev, level_xsrc=lx)
+    _one(verify_device_plan(bad, plan), "device-identity-lanes",
+         f"level_xsrc[{lv}, {row}]")
+
+
+def test_mut_level_monotonicity_broken(plan, dev):
+    """A level-1 lane gathering a row that is itself executed at level
+    2 reads an unsettled psum — the device-side cycle."""
+    ls = _np(dev.level_src)
+    r = np.arange(ls.shape[-1])
+    lvl1 = np.flatnonzero(ls[0] != r)     # rows executed at level 1
+    lvl2 = np.flatnonzero(ls[1] != r)     # rows executed at level 2
+    assert lvl1.size and lvl2.size
+    ls[0, lvl1[0]] = lvl2[0]
+    bad = dataclasses.replace(dev, level_src=ls)
+    _one(verify_device_plan(bad, plan), "device-level-monotone",
+         f"level_src[0, {lvl1[0]}]")
+
+
+def test_mut_non_dead_pad_lane(plan, dev):
+    d = int(np.asarray(dev.direct_idx).shape[-1])
+    padded = pad_device_plan(dev, d + 2)
+    db = _np(padded.direct_bits)
+    db[-1, 0] = 1                         # pad lane with a live bit
+    bad = dataclasses.replace(padded, direct_bits=db)
+    f = _one(verify_device_plan(bad, plan), "device-direct-dispatch",
+             f"direct_bits[{d + 1}, 0]")
+    assert "pad lane" in f.message
+
+
+def test_mut_content_corruption_caught_by_agreement(plan, dev):
+    """A flipped source that stays individually well-formed is still
+    caught: the lowering no longer agrees with its plan."""
+    ls = _np(dev.level_src)
+    r = np.arange(ls.shape[-1])
+    never_exec = np.flatnonzero((ls == r[None, :]).all(0))
+    direct = set(_np(dev.direct_idx).tolist())
+    gathered = set(ls[ls != r[None, :]].tolist())
+    lanes = [int(rr) for rr in never_exec
+             if rr not in direct and rr not in gathered]
+    srcs = [int(rr) for rr in never_exec
+            if rr not in direct and rr != lanes[0]]
+    lane, src = lanes[0], srcs[0]
+    lv = ls.shape[0] - 1
+    # a last-level lane gathering a never-executed row: in bounds,
+    # identity-consistent, monotone (src settles "at level -1"), one
+    # writer — only the recompile comparison can see it
+    ls[lv, lane] = src
+    lx = _np(dev.level_xsrc)
+    lx[lv, lane] = 0                      # live lane: xsrc != K
+    bad = dataclasses.replace(dev, level_src=ls, level_xsrc=lx)
+    _one(verify_device_plan(bad, plan), "plan-device-agreement",
+         "level_src")
+
+
+# -- mutation corpus: persisted bundles --------------------------------------
+
+def test_mut_truncated_bundle_npz(tmp_path, plan, dev):
+    p = str(tmp_path / "layer0.npz")
+    plan.save(p, device=dev, backend="engine_jit")
+    assert verify_bundle_file(p) == []
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[:len(blob) // 2])
+    f = _one(verify_bundle_file(p), "bundle-file", "layer0.npz")
+    assert "refused before any hash comparison" in f.message
+
+
+def _manifest():
+    files = [{"file": "l0.npz", "index": [], "sha256": "0" * 64}]
+    return {"format": 1, "backend": "engine_jit",
+            "engine_config": {"w_bits": 4, "t": 4},
+            "weights_fingerprint": "f" * 16, "n_layers": 1,
+            "n_files": 1,
+            "layers": {"blocks/0/qlin": {"lead": [], "groups": 1,
+                                         "files": files}}}
+
+
+def test_mut_manifest_missing_key():
+    m = _manifest()
+    del m["weights_fingerprint"]
+    _one(verify_manifest(m), "bundle-manifest", "weights_fingerprint")
+
+
+def test_mut_manifest_duplicate_slice_index():
+    m = _manifest()
+    meta = m["layers"]["blocks/0/qlin"]
+    meta["lead"] = [2]
+    meta["files"] = [
+        {"file": "a.npz", "index": [0], "sha256": "0" * 64},
+        {"file": "b.npz", "index": [0], "sha256": "1" * 64}]
+    m["n_files"] = 2
+    _one(verify_manifest(m), "bundle-manifest", "files[1].index")
+
+
+def test_clean_manifest():
+    assert verify_manifest(_manifest()) == []
+
+
+# -- gate attribution --------------------------------------------------------
+
+def test_gate_cache_publish_refuses_corrupt_plan(cache, monkeypatch):
+    """A planner bug (here: injected) is stopped AT PUBLISH — the cache
+    never serves the malformed plan, and the failure is attributed to
+    the cache-publish gate."""
+    real = BatchedTransitiveEngine.plan
+
+    def corrupt(self, w, groups=1):
+        p = real(self, w, groups=groups)
+        rows = np.array(p.rows, np.int64)
+        rows[0, 0, 0] = 1 << p.t
+        return dataclasses.replace(p, rows=rows)
+
+    monkeypatch.setattr(BatchedTransitiveEngine, "plan", corrupt)
+    w = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (8, 16), -8, 8))
+    with pytest.raises(PlanVerificationError) as ei:
+        cache.get_or_build(w, EngineConfig(w_bits=4, t=4, groups=1))
+    assert ei.value.where == "cache-publish"
+    assert ei.value.findings[0].rule == "plan-bounds"
+    # nothing was published: a healthy rebuild is a MISS, not a hit
+    monkeypatch.setattr(BatchedTransitiveEngine, "plan", real)
+    cache.get_or_build(w, EngineConfig(w_bits=4, t=4, groups=1))
+    assert cache.stats()["hits"] == 0
+
+
+def test_gate_bundle_load_refuses_before_sha256(cache, tmp_path,
+                                                monkeypatch):
+    """The acceptance wording, literally: a corrupted bundle file is
+    rejected by planlint BEFORE the sha256 check ever reads it."""
+    from repro.configs import get_reduced
+    from repro.fleet import bundles
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=1),
+                       backend="engine_jit")
+    raw = Model(cfg).init(jax.random.PRNGKey(0))
+    bdir = str(tmp_path / "b")
+    manifest = bundles.write_bundles(raw, cfg.quant, bdir)
+    victim = next(iter(
+        manifest["layers"].values()))["files"][0]["file"]
+    vpath = os.path.join(bdir, victim)
+    blob = open(vpath, "rb").read()
+    open(vpath, "wb").write(blob[:len(blob) // 2])   # truncate
+
+    hashed = []
+    real_sha = bundles._sha256
+    monkeypatch.setattr(bundles, "_sha256",
+                        lambda p: hashed.append(str(p)) or real_sha(p))
+    with pytest.raises(PlanVerificationError) as ei:
+        bundles.load_bundles(raw, cfg.quant, bdir)
+    assert ei.value.where == "bundle-load"
+    assert ei.value.findings[0].rule == "bundle-file"
+    assert vpath not in hashed, \
+        "sha256 ran on the corrupted file before planlint refused it"
+
+
+def test_gate_swap_staging_refuses_corrupt_dplan(cache):
+    """A malformed DevicePlan in a hot-swap generation is refused at
+    swap_params staging — it never waits in _staged for the scheduling
+    thread to attach."""
+    from repro.configs import get_reduced
+    from repro.fleet import build_generation
+    from repro.launch.specs import serve_config
+    from repro.models.model import Model
+    from repro.serve import ServeEngine
+    cfg = serve_config(get_reduced("smollm_135m").replace(n_layers=1),
+                       backend="engine_jit")
+    model = Model(cfg)
+    gen0 = build_generation(model, model.init(jax.random.PRNGKey(0)),
+                            gen=0)
+    gen1 = build_generation(model, model.init(jax.random.PRNGKey(9)),
+                            ref=gen0.params, gen=1)
+    eng = ServeEngine(model, gen0.params, n_slots=2, max_len=16,
+                      page_size=4)
+
+    def corrupt(tree):
+        from repro.core.engine import DevicePlan
+        if isinstance(tree, DevicePlan):
+            gi = np.array(tree.gather_idx, np.int64)
+            gi[(0,) * gi.ndim] = -1
+            return dataclasses.replace(tree, gather_idx=gi)
+        if isinstance(tree, dict):
+            return {k: corrupt(v) for k, v in tree.items()}
+        return tree
+
+    with pytest.raises(PlanVerificationError) as ei:
+        eng.swap_params(corrupt(gen1.params))
+    assert ei.value.where == "swap-staging"
+    assert ei.value.findings[0].rule == "device-bounds"
+    assert eng.stats()["swaps_staged"] == 0   # nothing was staged
+    eng.swap_params(gen1.params)              # the healthy swap stages
+    assert eng.stats()["swaps_staged"] == 1
+
+
+def test_gates_disabled_by_env(plan, monkeypatch):
+    monkeypatch.setenv("REPRO_PLANLINT", "0")
+    bad = dataclasses.replace(plan, groups=3)
+    planlint.gate_plan(bad, where="anywhere")   # no raise when off
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_plan_rule_registry_is_loud():
+    class Dummy(planlint.PlanRule):
+        name = "plan-shape"                    # collides
+
+    with pytest.raises(ValueError, match="already registered"):
+        planlint.register_plan_rule(Dummy())
+    with pytest.raises(KeyError, match="unknown plan rule"):
+        planlint.unregister_plan_rule("no-such-rule")
+    assert "plan-schedule-dag" in list_plan_rules()
+
+
+# -- costcheck: metrics + cross-check ----------------------------------------
+
+def test_jaxpr_cost_scan_weighting_and_pool_tracking():
+    import jax.numpy as jnp
+
+    def f(pool, idx, x):
+        view = pool.reshape(-1, 4)            # still the pool
+        def body(c, i):
+            page = view[idx[i]]               # pool gather, xL
+            return c + page.sum() + x[i], None
+        c, _ = jax.lax.scan(body, 0.0, jnp.arange(8))
+        return c
+
+    jx = jax.make_jaxpr(f)(jnp.zeros(64), jnp.zeros(8, jnp.int32),
+                           jnp.zeros(8))
+    m = costcheck.jaxpr_cost(jx, pool_range=(0, 1))
+    assert m.pool_gathers >= 1
+    # one (4,)-f32 page per scan iteration, scan length 8
+    assert m.pool_gather_bytes == pytest.approx(8 * 4 * 4)
+    # the same gather NOT taint-attributed without a pool range
+    m0 = costcheck.jaxpr_cost(jx)
+    assert m0.pool_gather_bytes == 0 and m0.gather_bytes > 0
+
+
+def test_jaxpr_cost_counts_loops_and_scatters():
+    import jax.numpy as jnp
+
+    def f(a):
+        def body(c, i):
+            return c.at[i].add(1.0), None
+        c, _ = jax.lax.scan(body, a, jnp.arange(4))
+        return jax.lax.while_loop(lambda v: v.sum() < 10,
+                                  lambda v: v + 1, c)
+
+    m = costcheck.jaxpr_cost(jax.make_jaxpr(f)(jnp.zeros(4)))
+    assert m.scatter_in_loop >= 1
+    assert m.while_loops == 1
+    assert m.peak_live_bytes > 0
+
+
+def test_crosscheck_costmodel_agrees(plan):
+    assert costcheck.crosscheck_costmodel(plan) == []
+
+
+def test_crosscheck_costmodel_catches_divergence(plan):
+    """Dropping a schedule edge breaks the ppe_ops identity — the
+    analytical model now budgets ops the schedule doesn't run."""
+    s = plan.steps[0]
+    cut = _mut_step(plan, 0, **{k: _np(getattr(s, k))[1:]
+                                for k in ("tile", "node", "prefix",
+                                          "bit")})
+    fs = costcheck.crosscheck_costmodel(cut)
+    assert len(fs) == 1 and fs[0].rule == "cost-model-agreement"
+    assert fs[0].path == "ppe_ops"
+
+
+def test_plan_cost_fields(plan):
+    pc = costcheck.plan_cost(plan)
+    assert pc["levels"] == len(plan.steps)
+    assert pc["ppe_adds"] == pc["step_edges"] + pc["direct_adds"]
+
+
+# -- costcheck: budgets ------------------------------------------------------
+
+def test_budget_file_loads_and_validates(tmp_path):
+    b = costcheck.load_budgets()
+    assert {x["name"] for x in b["budgets"]} >= {
+        "live-page-decode", "swap-trace-count"}
+    bad = tmp_path / "b.json"
+    bad.write_text(json.dumps({"format": 0, "budgets": []}))
+    with pytest.raises(ValueError, match="format"):
+        costcheck.load_budgets(bad)
+    bad.write_text(json.dumps(
+        {"format": 1, "budgets": [{"name": "x"}]}))
+    with pytest.raises(ValueError, match="missing"):
+        costcheck.load_budgets(bad)
+
+
+def test_live_page_budget_fails_when_hand_broken(cache, tmp_path):
+    """The headline asymmetry: the Pallas live-page kernel's pool reads
+    do not grow with max_len (budget passes); pointing the SAME budget
+    at the oracle paged-decode — which walks the whole page table every
+    step — makes it fail, i.e. the budget genuinely measures O(live
+    pages) vs O(max_len)."""
+    budgets = {"format": 1, "budgets": [
+        {"name": "live-page-decode", "program": "paged-attention",
+         "metric": "pool_gather_bytes_growth", "max": 1.25},
+        {"name": "live-page-decode-broken", "program": "paged-decode",
+         "metric": "pool_gather_bytes_growth", "max": 1.25}]}
+    p = tmp_path / "budgets.json"
+    p.write_text(json.dumps(budgets))
+    report, findings = costcheck.check_budgets(
+        ["engine_jit"], budgets_path=p)
+    by_name = {r["budget"]: r for r in report if "value" in r}
+    assert by_name["live-page-decode"]["ok"]
+    assert not by_name["live-page-decode-broken"]["ok"]
+    assert by_name["live-page-decode-broken"]["value"] == \
+        pytest.approx(2.0, rel=0.01)
+    assert [f.primitive for f in findings] == ["live-page-decode-broken"]
+    assert findings[0].rule == "cost-budget"
+
+
+def test_swap_trace_budget_fails_when_hand_broken(cache, tmp_path):
+    """decode traces across a hot swap: 1 when the new generation is
+    pad-aligned (budget passes), 2 when the alignment is skipped and
+    the DevicePlan avals drift (budget fails)."""
+    budgets = {"format": 1, "budgets": [
+        {"name": "swap-trace-count", "backend": "engine_jit",
+         "program": "paged-decode-swapped",
+         "metric": "decode_jit_traces", "max": 1},
+        {"name": "swap-trace-count-broken", "backend": "engine_jit",
+         "program": "paged-decode-swapped",
+         "metric": "decode_jit_traces", "max": 1, "aligned": False}]}
+    p = tmp_path / "budgets.json"
+    p.write_text(json.dumps(budgets))
+    report, findings = costcheck.check_budgets(
+        ["engine_jit"], budgets_path=p)
+    by_name = {r["budget"]: r for r in report if "value" in r}
+    assert by_name["swap-trace-count"]["value"] == 1.0
+    assert by_name["swap-trace-count-broken"]["value"] == 2.0
+    assert [f.primitive for f in findings] == ["swap-trace-count-broken"]
+
+
+# -- lint_plans driver -------------------------------------------------------
+
+def test_lint_plans_clean_on_engine_jit(cache):
+    report, findings = planlint.lint_plans(["engine_jit"])
+    assert findings == [], [f.format() for f in findings]
+    assert report and report[0]["backend"] == "engine_jit"
